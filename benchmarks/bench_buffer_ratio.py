@@ -1,0 +1,50 @@
+"""Paper Fig. 12: VeloANN vs fully in-memory Vamana at varying buffer ratios.
+
+Claims checked: QPS approaches the in-memory index as the ratio grows
+(paper: 0.73x/0.78x/0.92x at 10/30/50%); latency stays within a small
+multiple."""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import baselines
+
+
+def run(quick: bool = True) -> dict:
+    w = common.sift_like(quick)
+    ratios = [0.1, 0.3, 0.5]
+    pts = []
+
+    mem_cfg = baselines.SystemConfig(
+        batch_size=16, n_workers=2, params=baselines.SearchParams(L=48)
+    )
+    mem = baselines.build_system("inmemory", w.ds.base, w.graph, w.qb, mem_cfg)
+    _, mem_stats = mem.run(w.ds.queries)
+
+    for ratio in ratios:
+        cfg = baselines.SystemConfig(
+            buffer_ratio=ratio, batch_size=16, n_workers=2,
+            params=baselines.SearchParams(L=48, W=4),
+        )
+        sys_ = baselines.build_system("velo", w.ds.base, w.graph, w.qb, cfg)
+        _, stats = sys_.run(w.ds.queries)
+        pts.append({
+            "ratio": ratio,
+            "qps": stats.qps,
+            "qps_frac_of_inmemory": stats.qps / max(mem_stats.qps, 1e-9),
+            "latency_x_inmemory": stats.mean_latency_ms
+            / max(mem_stats.mean_latency_ms, 1e-9),
+        })
+
+    rows = [[f"{p['ratio']:.0%}", f"{p['qps']:.0f}",
+             f"{p['qps_frac_of_inmemory']:.2f}x",
+             f"{p['latency_x_inmemory']:.2f}x"] for p in pts]
+    rows.append(["in-memory", f"{mem_stats.qps:.0f}", "1.00x", "1.00x"])
+    text = common.fmt_table(["buffer ratio", "QPS", "QPS vs mem", "lat vs mem"], rows)
+
+    checks = {
+        "qps_improves_with_ratio": pts[-1]["qps"] >= pts[0]["qps"],
+        "approaches_inmemory": pts[-1]["qps_frac_of_inmemory"] > 0.4,
+    }
+    return {"name": "F12_buffer_ratio", "points": pts,
+            "inmemory_qps": mem_stats.qps, "text": text, "checks": checks}

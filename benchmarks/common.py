@@ -1,0 +1,74 @@
+"""Shared benchmark context: datasets + graphs + quantizers, built once and
+cached on disk (Vamana construction is the expensive step)."""
+
+from __future__ import annotations
+
+import os
+import pickle
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import dataset as dataset_mod  # noqa: E402
+from repro.core import vamana  # noqa: E402
+from repro.core.quant import RabitQuantizer  # noqa: E402
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), ".cache")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+class Workload:
+    """dataset + graph + quantized base, disk-cached by key."""
+
+    def __init__(self, name, n, d, n_queries, R, L, seed=0, query_skew=1.2):
+        self.key = f"{name}-n{n}-d{d}-q{n_queries}-R{R}-L{L}-s{seed}"
+        os.makedirs(CACHE_DIR, exist_ok=True)
+        path = os.path.join(CACHE_DIR, self.key + ".pkl")
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                self.ds, self.graph, self.qb = pickle.load(f)
+            return
+        self.ds = dataset_mod.make_dataset(
+            n=n, d=d, n_queries=n_queries, k=10, seed=seed,
+            query_skew=query_skew, name=name,
+        )
+        self.graph = vamana.build_vamana(self.ds.base, R=R, L=L, seed=seed)
+        self.qb = RabitQuantizer(d, seed=seed).fit_encode(self.ds.base)
+        with open(path, "wb") as f:
+            pickle.dump((self.ds, self.graph, self.qb), f)
+
+
+_WORKLOADS: dict[str, Workload] = {}
+
+
+def sift_like(quick: bool = True) -> Workload:
+    key = f"sift-{quick}"
+    if key not in _WORKLOADS:
+        if quick:
+            _WORKLOADS[key] = Workload("siftq", n=6000, d=64, n_queries=300, R=24, L=48)
+        else:
+            _WORKLOADS[key] = Workload("sift", n=20000, d=128, n_queries=800, R=32, L=64)
+    return _WORKLOADS[key]
+
+
+def gist_like(quick: bool = True) -> Workload:
+    key = f"gist-{quick}"
+    if key not in _WORKLOADS:
+        if quick:
+            _WORKLOADS[key] = Workload("gistq", n=3000, d=480, n_queries=150, R=24, L=48)
+        else:
+            _WORKLOADS[key] = Workload("gist", n=6000, d=960, n_queries=300, R=32, L=64)
+    return _WORKLOADS[key]
+
+
+def fmt_table(headers: list[str], rows: list[list]) -> str:
+    widths = [
+        max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+        for i, h in enumerate(headers)
+    ]
+    def line(vals):
+        return "  ".join(str(v).ljust(w) for v, w in zip(vals, widths))
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])

@@ -1,0 +1,80 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run [--full] [--only NAME]
+
+Writes benchmarks/out/results.json and prints each table with the paper
+claims it validates.  --full uses the larger workloads (slower, tighter
+match to the paper's regimes); default is the quick profile.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import time
+import traceback
+
+from benchmarks import common
+
+MODULES = [
+    "bench_hit_rate",        # Table 1
+    "bench_access_skew",     # Fig 4
+    "bench_fragmentation",   # Fig 6
+    "bench_throughput",      # Fig 8 (+ Fig 1)
+    "bench_batch_size",      # Fig 9
+    "bench_beam_width",      # Fig 10
+    "bench_thread_scaling",  # Fig 11
+    "bench_buffer_ratio",    # Fig 12
+    "bench_tau",             # Fig 13
+    "bench_breakdown",       # Fig 14
+    "bench_index_size",      # Table 3
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    os.makedirs(common.OUT_DIR, exist_ok=True)
+    results = {}
+    n_checks = n_pass = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        mod = importlib.import_module(f"benchmarks.{modname}")
+        t0 = time.time()
+        try:
+            res = mod.run(quick=quick)
+        except Exception as e:  # noqa: BLE001
+            res = {"name": modname, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:], "checks": {}}
+        dt = time.time() - t0
+        results[modname] = res
+        print(f"\n=== {res.get('name', modname)}  ({dt:.1f}s) ===")
+        if "error" in res:
+            print("ERROR:", res["error"])
+            continue
+        print(res["text"])
+        for check, ok in res.get("checks", {}).items():
+            n_checks += 1
+            n_pass += bool(ok)
+            print(f"  [{'PASS' if ok else 'FAIL'}] {check}")
+
+    path = os.path.join(common.OUT_DIR, "results.json")
+    with open(path, "w") as f:
+        json.dump(
+            {k: {kk: vv for kk, vv in v.items() if kk != "text"}
+             for k, v in results.items()},
+            f, indent=1, default=float,
+        )
+    print(f"\n==== paper-claim checks: {n_pass}/{n_checks} pass ====")
+    print(f"results -> {path}")
+
+
+if __name__ == "__main__":
+    main()

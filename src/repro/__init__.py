@@ -1,0 +1,9 @@
+"""repro — VeloANN-JAX: SSD-resident graph ANN reproduced as a multi-pod JAX framework.
+
+Three planes (see DESIGN.md):
+  * repro.core   — faithful host-plane reproduction (index, buffer pool, async runtime sim)
+  * repro.velo   — TPU-native device plane (batched beam search, Pallas kernels)
+  * repro.models — assigned LM architectures + training/serving substrate
+"""
+
+__version__ = "0.1.0"

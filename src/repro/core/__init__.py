@@ -1,0 +1,18 @@
+"""Host-plane faithful reproduction of VeloANN (paper §3-§4).
+
+Submodules:
+  dataset     — synthetic vector workloads + ground truth
+  flat        — brute-force exact search (oracle)
+  quant       — RaBitQ-style 1-bit + 4-bit two-level quantization (paper §3.3)
+  codec       — delta-varint + partitioned Elias-Fano adjacency compression (§3.3)
+  pages       — slotted variable-size-record page layout (§3.3, Fig. 7)
+  vamana      — batched Vamana graph construction + affinity coloring (Alg. 1)
+  placement   — affinity-based record co-placement (§3.4)
+  store       — on-"disk" page store (the simulated SSD-resident index)
+  bufferpool  — record-level buffer pool, clock second-chance (§3.2, Fig. 5)
+  pagecache   — page-level LRU/FIFO/Random baselines (Table 1)
+  search      — search algorithms as schedulable coroutines (Alg. 2 + baselines)
+  sim         — discrete-event SSD + CPU cost model
+  engine      — coroutine scheduler (paper Fig. 3) sync/async executors
+  baselines   — DiskANN-, Starling-, PipeANN-style system configurations
+"""

@@ -1,0 +1,262 @@
+"""System configurations compared in the paper (§5.2) + breakdown variants (§5.5).
+
+``build_system`` wires an index layout, an access path (record pool vs page
+cache), a search algorithm, and an execution mode into one runnable bundle;
+``evaluate`` runs a query workload through the engine and reports
+recall / QPS / latency / I/O / hit-rate — the axes of Figs. 8-14.
+
+Systems:
+  velo       VeloIndex (affinity layout) + record pool + Alg.2 + async
+  diskann    FixedIndex (seq)     + page LRU + sync beam search (B=1)
+  starling   FixedIndex (shuffle) + page LRU + block search (B=1)
+  pipeann    FixedIndex (seq)     + page LRU + pipelined best-first (B=1)
+  inmemory   fp32 in-memory Vamana greedy search (no I/O)
+Breakdown variants (Fig. 14), all on the VeloANN layout:
+  baseline   sync beam search, page cache
+  +async     same, B>1
+  +record    record pool
+  +prefetch  + stride prefetching
+  +cbs       + cache-aware pivot  (== velo)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import search as search_mod
+from repro.core.bufferpool import RecordBufferPool
+from repro.core.dataset import Dataset, recall_at_k
+from repro.core.engine import run_workload
+from repro.core.pagecache import PageCache
+from repro.core.quant import QuantizedBase, RabitQuantizer
+from repro.core.search import (
+    PageAccessor,
+    RecordAccessor,
+    SearchContext,
+    SearchParams,
+)
+from repro.core.sim import SSD, CostModel, SSDConfig, WorkloadStats
+from repro.core.store import FixedIndex, VeloIndex
+from repro.core.vamana import VamanaGraph
+
+
+@dataclasses.dataclass
+class SystemConfig:
+    name: str = "velo"
+    buffer_ratio: float = 0.2     # memory budget as a fraction of disk index size
+    page_size: int = 4096
+    n_workers: int = 1
+    batch_size: int = 8           # B (1 == synchronous)
+    params: SearchParams = dataclasses.field(default_factory=SearchParams)
+    tau_scale: float = 1.0        # 0 disables co-placement
+    adj_codec: str = "pef"
+    page_policy: str = "lru"
+    co_admit: bool = True         # colored co-admission (§3.4 fetch rule)
+    track_access: bool = False    # per-vertex/page counters (Fig. 4)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class System:
+    """A runnable ANN system: index + cache + algorithm + engine config."""
+
+    name: str
+    config: SystemConfig
+    index: object
+    ctx: SearchContext
+    algorithm: object
+    store: object
+    cost: CostModel
+
+    def make_coroutine(self, qid: int, q: np.ndarray):
+        return self.algorithm(self.ctx, q, self.config.params)
+
+    def run(
+        self, queries: np.ndarray, ssd_config: SSDConfig | None = None
+    ) -> tuple[list, WorkloadStats]:
+        ssd = SSD(ssd_config)
+        results, stats = run_workload(
+            self.make_coroutine,
+            queries,
+            store=self.store,
+            cost=self.cost,
+            ssd=ssd,
+            n_workers=self.config.n_workers,
+            batch_size=self.config.batch_size,
+            page_size=self.config.page_size,
+        )
+        hits, misses = self.ctx.accessor.stats()
+        stats.cache_hits = hits
+        stats.cache_misses = misses
+        return results, stats
+
+    # ---- memory accounting (Table 3) ----
+    def disk_bytes(self) -> int:
+        return self.index.disk_bytes()
+
+    def memory_bytes(self) -> int:
+        """Resident metadata + buffer budget (paper §5.3 footprint analysis)."""
+        return self.index.resident_bytes() + int(
+            self.config.buffer_ratio * self.index.disk_bytes()
+        )
+
+
+# ----------------------------------------------------------------- builders
+
+
+def _record_slot_bytes(dim: int, R: int) -> int:
+    # decoded record: ext code (d/2) + lo/step (8) + adjacency ids (4R logical)
+    return dim // 2 + 8 + 4 * R
+
+
+_BREAKDOWN = {
+    "baseline": dict(algo="diskann", pool="page", batch=1, prefetch=False, cbs=False),
+    "+async": dict(algo="diskann", pool="page", batch=None, prefetch=False, cbs=False),
+    "+record": dict(algo="diskann", pool="record", batch=None, prefetch=False, cbs=False),
+    "+prefetch": dict(algo="velo", pool="record", batch=None, prefetch=True, cbs=False),
+    "+cbs": dict(algo="velo", pool="record", batch=None, prefetch=True, cbs=True),
+}
+
+
+def build_system(
+    name: str,
+    base: np.ndarray,
+    graph: VamanaGraph,
+    qb: QuantizedBase,
+    config: SystemConfig | None = None,
+    cost: CostModel | None = None,
+) -> System:
+    config = config or SystemConfig()
+    config = dataclasses.replace(config, name=name)
+    cost = cost or CostModel()
+    n, dim = base.shape
+
+    def record_pool_for(index) -> RecordAccessor:
+        budget = config.buffer_ratio * index.disk_bytes()
+        n_slots = max(8, int(budget // _record_slot_bytes(dim, graph.R)))
+        pool = RecordBufferPool(min(n_slots, n), index.layout.vid_to_page)
+        return RecordAccessor(index, pool, cost, co_admit=config.co_admit,
+                              track_access=config.track_access)
+
+    def page_cache_for(index) -> PageAccessor:
+        budget = config.buffer_ratio * index.disk_bytes()
+        pages = max(4, int(budget // config.page_size))
+        cache = PageCache(pages, policy=config.page_policy, seed=config.seed)
+        return PageAccessor(index, cache, cost, track_access=config.track_access)
+
+    if name == "velo":
+        index = VeloIndex(
+            base, graph, qb,
+            adj_codec=config.adj_codec,
+            page_size=config.page_size,
+            tau_scale=config.tau_scale,
+        )
+        acc = record_pool_for(index)
+        algo = search_mod.velo_search
+        refine = cost.refine_ext(dim)
+        batch = config.batch_size
+    elif name == "velo-page":
+        # VeloANN layout + Alg. 2 but page-granular caching (Fig. 13's VeloANN-Page)
+        index = VeloIndex(
+            base, graph, qb,
+            adj_codec=config.adj_codec,
+            page_size=config.page_size,
+            tau_scale=config.tau_scale,
+        )
+        acc = page_cache_for(index)
+        algo = search_mod.velo_search
+        refine = cost.refine_ext(dim)
+        batch = config.batch_size
+    elif name == "diskann":
+        index = FixedIndex(base, graph, qb, page_size=config.page_size, shuffle=False)
+        acc = page_cache_for(index)
+        algo = search_mod.diskann_search
+        refine = cost.refine_full(dim)
+        batch = 1  # synchronous
+    elif name == "starling":
+        index = FixedIndex(base, graph, qb, page_size=config.page_size, shuffle=True)
+        acc = page_cache_for(index)
+        algo = search_mod.starling_search
+        refine = cost.refine_full(dim)
+        batch = 1
+    elif name == "pipeann":
+        index = FixedIndex(base, graph, qb, page_size=config.page_size, shuffle=False)
+        acc = page_cache_for(index)
+        algo = search_mod.pipeann_search
+        refine = cost.refine_full(dim)
+        batch = 1
+    elif name == "inmemory":
+        index = VeloIndex(base, graph, qb, page_size=config.page_size, tau_scale=0.0)
+        acc = record_pool_for(index)  # unused: algorithm never touches disk
+        algo = search_mod.inmemory_search
+        refine = cost.refine_full(dim)
+        batch = config.batch_size
+    elif name in _BREAKDOWN:
+        spec = _BREAKDOWN[name]
+        index = VeloIndex(
+            base, graph, qb,
+            adj_codec=config.adj_codec,
+            page_size=config.page_size,
+            tau_scale=config.tau_scale,
+        )
+        acc = record_pool_for(index) if spec["pool"] == "record" else page_cache_for(index)
+        algo = search_mod.ALGORITHMS[spec["algo"]]
+        refine = cost.refine_ext(dim)
+        batch = spec["batch"] or config.batch_size
+        config = dataclasses.replace(
+            config,
+            params=dataclasses.replace(
+                config.params, prefetch=spec["prefetch"], cbs=spec["cbs"]
+            ),
+        )
+    else:
+        raise ValueError(f"unknown system {name!r}")
+
+    config = dataclasses.replace(config, batch_size=batch)
+    ctx = SearchContext(
+        index=index,
+        qb=qb,
+        accessor=acc,
+        cost=cost,
+        medoid=graph.medoid,
+        base=base if name == "inmemory" else None,
+        refine_cost_s=refine,
+    )
+    return System(
+        name=name,
+        config=config,
+        index=index,
+        ctx=ctx,
+        algorithm=algo,
+        store=index.store,
+        cost=cost,
+    )
+
+
+def evaluate(
+    system: System,
+    ds: Dataset,
+    ssd_config: SSDConfig | None = None,
+) -> dict:
+    """Run all dataset queries; return the paper's metrics."""
+    results, stats = system.run(ds.queries, ssd_config)
+    k = ds.k
+    ids = np.full((len(results), k), -1, dtype=np.int64)
+    for i, r in enumerate(results):
+        m = min(k, len(r.ids))
+        ids[i, :m] = r.ids[:m]
+    rec = recall_at_k(ids, ds.groundtruth, k)
+    return {
+        "system": system.name,
+        "recall@k": rec,
+        "qps": stats.qps,
+        "mean_latency_ms": stats.mean_latency_ms,
+        "p99_latency_ms": stats.p99_latency_ms(),
+        "ios_per_query": stats.ios_per_query,
+        "hit_rate": stats.hit_rate,
+        "disk_bytes": system.disk_bytes(),
+        "memory_bytes": system.memory_bytes(),
+        "mean_hops": float(np.mean([r.hops for r in results])),
+    }

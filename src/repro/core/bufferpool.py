@@ -1,0 +1,171 @@
+"""Record-level buffer pool with clock second-chance eviction (paper §3.2, Fig. 5).
+
+Faithful pieces:
+
+  * a slotted pool sized to a fraction of the index ("buffer ratio"), with a
+    free list of slots;
+  * the *record mapping array*: one hybrid pointer per vertex whose MSB encodes
+    residency — MSB=1: remaining bits index a pool slot; MSB=0: remaining bits
+    are the page id of the record's disk location.  O(1) vid -> location, no
+    hash table, no pointer swizzling (works for graphs, unlike LeanStore).
+  * per-slot state machine FREE -> LOCKED -> OCCUPIED <-> MARKED -> FREE driven
+    exactly as Fig. 5 (Locked during load; clock hand demotes Occupied to
+    Marked; access promotes Marked back; Marked slots under the hand are
+    evicted).
+
+Adaptation note (DESIGN.md §2): the paper uses CAS atomics because coroutines
+race on slots; our engine is single-threaded per worker and lockstep on device,
+so the same state machine is evolved without atomics — transitions and
+invariants are identical and are what tests/test_bufferpool.py checks.
+"""
+
+from __future__ import annotations
+
+import enum
+
+import numpy as np
+
+RESIDENT_BIT = np.uint64(1) << np.uint64(63)
+PTR_MASK = RESIDENT_BIT - np.uint64(1)
+
+
+class SlotState(enum.IntEnum):
+    FREE = 0
+    LOCKED = 1
+    OCCUPIED = 2
+    MARKED = 3
+
+
+class RecordBufferPool:
+    """Caches decoded records at *record* granularity."""
+
+    def __init__(self, n_slots: int, vid_to_page: np.ndarray):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self.disk_pages = np.asarray(vid_to_page, dtype=np.int64)  # immutable
+        # record mapping array: initially every record is on disk at its page.
+        self.record_map = self.disk_pages.astype(np.uint64) & PTR_MASK
+        self.state = np.full(n_slots, SlotState.FREE, dtype=np.int8)
+        self.slot_vid = np.full(n_slots, -1, dtype=np.int64)
+        self.slots: list[object | None] = [None] * n_slots
+        self.free_list: list[int] = list(range(n_slots - 1, -1, -1))
+        self.hand = 0
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------- residency
+
+    def is_resident(self, vid: int) -> bool:
+        return bool(self.record_map[vid] & RESIDENT_BIT)
+
+    def page_of(self, vid: int) -> int:
+        """Disk page id from the hybrid pointer (valid when not resident)."""
+        assert not self.is_resident(vid)
+        return int(self.record_map[vid] & PTR_MASK)
+
+    def _slot_of(self, vid: int) -> int:
+        return int(self.record_map[vid] & PTR_MASK)
+
+    # ---------------------------------------------------------------- lookup
+
+    def lookup(self, vid: int) -> object | None:
+        """Hit: return record, giving MARKED slots their second chance.
+        Miss: return None (caller loads via `admit`)."""
+        if self.is_resident(vid):
+            slot = self._slot_of(vid)
+            if self.state[slot] == SlotState.MARKED:
+                self.state[slot] = SlotState.OCCUPIED  # second chance
+            self.hits += 1
+            return self.slots[slot]
+        self.misses += 1
+        return None
+
+    def peek_resident(self, vid: int) -> bool:
+        """Residency probe without stats side effects (Alg. 2's InMemory()
+        test and the prefetcher use this)."""
+        return self.is_resident(vid)
+
+    # ----------------------------------------------------------------- admit
+
+    def admit(self, vid: int, record: object) -> int:
+        """Load a record into a slot (LOCKED during load, then OCCUPIED)."""
+        if self.is_resident(vid):  # duplicate admit (prefetch + demand): keep first
+            return self._slot_of(vid)
+        slot = self._acquire_slot()
+        self.state[slot] = SlotState.LOCKED
+        self.slot_vid[slot] = vid
+        self.slots[slot] = record
+        self.record_map[vid] = RESIDENT_BIT | np.uint64(slot)
+        self.state[slot] = SlotState.OCCUPIED
+        return slot
+
+    def _acquire_slot(self) -> int:
+        if self.free_list:
+            return self.free_list.pop()
+        freed = self.run_clock(target=1)
+        assert freed, "clock failed to free a slot"
+        return self.free_list.pop()
+
+    # ----------------------------------------------------------------- clock
+
+    def run_clock(self, target: int = 1) -> int:
+        """Clock second-chance sweep (the paper's 'eviction coroutine').
+
+        OCCUPIED -> MARKED and advance; MARKED under the hand -> evict.
+        LOCKED is skipped.  Returns the number of slots freed.
+        """
+        freed = 0
+        steps = 0
+        max_steps = 3 * self.n_slots  # two full sweeps guarantee an eviction
+        while freed < target and steps < max_steps:
+            s = self.hand
+            self.hand = (self.hand + 1) % self.n_slots
+            steps += 1
+            st = self.state[s]
+            if st == SlotState.OCCUPIED:
+                self.state[s] = SlotState.MARKED
+            elif st == SlotState.MARKED:
+                self._evict_slot(s)
+                freed += 1
+        return freed
+
+    def _evict_slot(self, slot: int) -> None:
+        vid = int(self.slot_vid[slot])
+        assert vid >= 0
+        # restore the on-disk pointer (a record's page id never changes)
+        self.record_map[vid] = np.uint64(self.disk_pages[vid])
+        self.slot_vid[slot] = -1
+        self.slots[slot] = None
+        self.state[slot] = SlotState.FREE
+        self.free_list.append(slot)
+        self.evictions += 1
+
+    # ----------------------------------------------------------------- stats
+
+    def occupancy(self) -> int:
+        return self.n_slots - len(self.free_list)
+
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+
+    def check_invariants(self) -> None:
+        """Structural invariants (exercised by hypothesis tests):
+        every resident vid's slot points back at it; free slots hold nothing;
+        occupancy + free == n_slots."""
+        assert len(self.free_list) == (self.state == SlotState.FREE).sum()
+        for s in range(self.n_slots):
+            st = self.state[s]
+            if st == SlotState.FREE:
+                assert self.slots[s] is None and self.slot_vid[s] == -1
+            else:
+                vid = int(self.slot_vid[s])
+                assert vid >= 0
+                assert self.record_map[vid] == (RESIDENT_BIT | np.uint64(s))
+        resident = (self.record_map & RESIDENT_BIT) != 0
+        assert int(resident.sum()) == self.occupancy()

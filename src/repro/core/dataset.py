@@ -1,0 +1,102 @@
+"""Synthetic vector-search workloads with exact ground truth.
+
+The paper evaluates on SIFT1M/GIST1M/Wiki/Image/Text. Those are not available
+offline, so we generate clustered Gaussian datasets whose key properties match
+what the paper's mechanisms exploit:
+
+  * cluster structure            -> affinity co-placement has signal (§3.4)
+  * skewed query distribution    -> record-level cache has signal (§3.2, Fig. 4)
+  * configurable dimensionality  -> fragmentation study (Fig. 6) spans d=128..1536
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import flat
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataset:
+    """A vector search workload: base set, query set, exact top-k ground truth."""
+
+    name: str
+    base: np.ndarray        # (n, d) float32
+    queries: np.ndarray     # (q, d) float32
+    groundtruth: np.ndarray  # (q, k) int32 — exact top-k ids under L2
+    k: int
+
+    @property
+    def n(self) -> int:
+        return self.base.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.base.shape[1]
+
+
+def make_dataset(
+    n: int = 20_000,
+    d: int = 128,
+    n_queries: int = 500,
+    k: int = 10,
+    n_clusters: int | None = None,
+    query_skew: float = 1.2,
+    noise: float = 0.3,
+    seed: int = 0,
+    name: str | None = None,
+) -> Dataset:
+    """Clustered Gaussian base set; queries drawn near cluster centroids.
+
+    ``query_skew`` is the Zipf exponent over clusters: queries concentrate on a
+    few clusters, which reproduces the skewed vertex-access pattern the paper
+    measures in Fig. 4 (a uniform query mix still shows skew from graph hubs,
+    but the workload-level skew makes Table 1 / hit-rate experiments sharper).
+
+    ``n_clusters`` defaults to n/40: ~40 points per cluster keeps the data
+    navigable by greedy graph traversal (isolated blobs much larger than the
+    search beam trap best-first search — measured 0.52 in-memory recall at
+    64 clusters x 78 points vs 0.98 at this default).
+    """
+    rng = np.random.default_rng(seed)
+    if n_clusters is None:
+        n_clusters = max(32, n // 40)
+    centers = rng.standard_normal((n_clusters, d)).astype(np.float32)
+    # Center spread comparable to intra-cluster noise: near-neighbor distance
+    # gaps stay tight relative to the global spread, as in SIFT/GIST — this is
+    # what makes quantized refinement genuinely exercised.
+    centers *= 2.0 / np.sqrt(d)
+
+    assign = rng.integers(0, n_clusters, size=n)
+    base = centers[assign] + noise * rng.standard_normal((n, d)).astype(np.float32)
+    base = base.astype(np.float32)
+
+    # Zipf-ish cluster choice for queries.
+    ranks = np.arange(1, n_clusters + 1, dtype=np.float64)
+    probs = ranks ** (-query_skew)
+    probs /= probs.sum()
+    q_assign = rng.choice(n_clusters, size=n_queries, p=probs)
+    queries = centers[q_assign] + noise * rng.standard_normal(
+        (n_queries, d)
+    ).astype(np.float32)
+    queries = queries.astype(np.float32)
+
+    gt = flat.exact_topk(base, queries, k)
+    return Dataset(
+        name=name or f"synth-n{n}-d{d}",
+        base=base,
+        queries=queries,
+        groundtruth=gt,
+        k=k,
+    )
+
+
+def recall_at_k(result_ids: np.ndarray, groundtruth: np.ndarray, k: int) -> float:
+    """Recall@k per the paper's Eq. (2), averaged over queries."""
+    assert result_ids.shape[0] == groundtruth.shape[0]
+    hits = 0
+    for res, gt in zip(result_ids[:, :k], groundtruth[:, :k]):
+        hits += len(set(int(x) for x in res) & set(int(x) for x in gt))
+    return hits / (groundtruth.shape[0] * k)

@@ -1,0 +1,227 @@
+"""The coroutine scheduler + executors (paper §3.1, Fig. 2/3).
+
+Implements the paper's thread-per-core asynchronous execution model as a
+discrete-event simulation over real algorithm executions:
+
+  * each worker thread is a simulated timeline with its own scheduler;
+  * each query is a coroutine (Python generator, see search.py protocol);
+  * a cache miss suspends the coroutine; the scheduler switches to a ready
+    one; the I/O driver (the SSD model, stand-in for io_uring) completes
+    reads asynchronously; completed coroutines return to the ready queue;
+  * if no coroutine is ready, the worker busy-polls the completion queue
+    (time jumps to the next completion);
+  * the batch size B caps concurrently executing queries per worker
+    (paper: B = ceil(alpha * I / T)).
+
+Synchronous execution (DiskANN-style) is the degenerate case B=1.
+
+In-flight page reads are deduplicated (the paper's Locked slot state makes
+concurrent loads of one record coalesce; we apply the same rule at page
+granularity), so a prefetch racing a demand read costs one I/O, not two.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from collections.abc import Callable
+
+import numpy as np
+
+from repro.core.sim import SSD, CostModel, WorkloadStats
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_workers: int = 1
+    batch_size: int = 8        # B: coroutines in flight per worker
+    page_size: int = 4096
+
+
+class _Worker:
+    __slots__ = ("wid", "t", "ready", "active", "deferred_charge", "done_queries")
+
+    def __init__(self, wid: int):
+        self.wid = wid
+        self.t = 0.0
+        self.ready: deque = deque()  # (gen, resume_value, qid)
+        self.active = 0
+        self.deferred_charge = 0.0
+        self.done_queries = 0
+
+
+class Engine:
+    """Runs a workload of query coroutines over the simulated hardware."""
+
+    def __init__(
+        self,
+        store,                      # PageStore: pid -> bytes (data plane)
+        ssd: SSD,
+        cost: CostModel,
+        config: EngineConfig,
+    ):
+        self.store = store
+        self.ssd = ssd
+        self.cost = cost
+        self.config = config
+
+    def run(
+        self,
+        make_coroutine: Callable[[int, np.ndarray], object],
+        queries: np.ndarray,
+    ) -> tuple[list, WorkloadStats]:
+        cfg = self.config
+        workers = [_Worker(i) for i in range(cfg.n_workers)]
+        query_queue: deque[int] = deque(range(len(queries)))
+        start_time: dict[int, float] = {}
+        results: list = [None] * len(queries)
+        stats = WorkloadStats(n_queries=len(queries))
+
+        # global completion-event heap: (time, seq, kind, payload)
+        events: list = []
+        seq = 0
+        # in-flight page reads: pid -> completion_time (dedup window)
+        inflight: dict[int, float] = {}
+        token_counter = 0
+        token_info: dict[int, tuple[int, float]] = {}  # token -> (pid, completion)
+
+        def issue_read(t: float, pid: int, worker: _Worker) -> float:
+            """Submit one page read with in-flight dedup; returns completion time."""
+            comp = inflight.get(pid)
+            if comp is not None and comp > t:
+                return comp
+            comp = self.ssd.submit(t, cfg.page_size)
+            inflight[pid] = comp
+            stats.io_count += 1
+            stats.io_bytes += cfg.page_size
+            return comp
+
+        def push_event(time: float, kind: str, payload) -> None:
+            nonlocal seq
+            heapq.heappush(events, (time, seq, kind, payload))
+            seq += 1
+
+        def apply_due_events(now: float) -> None:
+            """Apply completions (callbacks / worker resumes) due by `now`."""
+            while events and events[0][0] <= now:
+                time, _, kind, payload = heapq.heappop(events)
+                if kind == "callback":
+                    cb, pid, issuer = payload
+                    cb(pid, self.store.read_page(pid))
+                    issuer.deferred_charge += self.cost.record_decode_s
+                elif kind == "resume":
+                    worker, gen, value, qid = payload
+                    worker.t = max(worker.t, time)
+                    worker.ready.append((gen, value, qid))
+
+        def run_worker_action(w: _Worker) -> None:
+            """One scheduling action on worker w (paper Fig. 3b loop body)."""
+            w.t += w.deferred_charge
+            w.deferred_charge = 0.0
+
+            if not w.ready:
+                if query_queue and w.active < cfg.batch_size:
+                    qid = query_queue.popleft()
+                    gen = make_coroutine(qid, queries[qid])
+                    w.active += 1
+                    start_time[qid] = w.t
+                    w.ready.append((gen, None, qid))
+                else:
+                    return
+
+            gen, value, qid = w.ready.popleft()
+            w.t += self.cost.coroutine_switch_s
+
+            while True:
+                try:
+                    op = gen.send(value)
+                except StopIteration as fin:
+                    results[qid] = fin.value
+                    latency = w.t - start_time[qid]
+                    stats.sum_latency_s += latency
+                    stats.latencies.append(latency)
+                    w.active -= 1
+                    w.done_queries += 1
+                    return
+
+                kind = op[0]
+                if kind == "compute":
+                    w.t += op[1]
+                    value = None
+                elif kind == "read":
+                    pids = op[1]
+                    w.t += self.cost.io_submit_s * max(1, len(pids))
+                    comp = max(issue_read(w.t, pid, w) for pid in pids)
+                    pages = {pid: self.store.read_page(pid) for pid in pids}
+                    push_event(comp, "resume", (w, gen, pages, qid))
+                    return  # suspended
+                elif kind == "submit_cb":
+                    _, pids, cb = op
+                    w.t += self.cost.io_submit_s
+                    for pid in pids:
+                        comp = issue_read(w.t, pid, w)
+                        push_event(comp, "callback", (cb, pid, w))
+                    value = None
+                elif kind == "submit":
+                    nonlocal token_counter
+                    pids = op[1]
+                    w.t += self.cost.io_submit_s
+                    tokens = []
+                    for pid in pids:
+                        comp = issue_read(w.t, pid, w)
+                        token_counter += 1
+                        token_info[token_counter] = (pid, comp)
+                        tokens.append(token_counter)
+                    value = tokens
+                elif kind == "wait_any":
+                    tokens = op[1]
+                    tok = min(tokens, key=lambda tk: token_info[tk][1])
+                    pid, comp = token_info.pop(tok)
+                    push_event(
+                        comp, "resume", (w, gen, (tok, pid, self.store.read_page(pid)), qid)
+                    )
+                    return  # suspended
+                else:  # pragma: no cover
+                    raise ValueError(f"unknown op {kind}")
+
+        # ------------------------------------------------------- global loop
+        def runnable(w: _Worker) -> bool:
+            return bool(w.ready) or (bool(query_queue) and w.active < cfg.batch_size)
+
+        while True:
+            cand = [w for w in workers if runnable(w)]
+            next_event_t = events[0][0] if events else None
+            if cand:
+                w = min(cand, key=lambda x: x.t)
+                if next_event_t is not None and next_event_t <= w.t:
+                    apply_due_events(w.t)
+                run_worker_action(w)
+            elif events:
+                t0 = events[0][0]
+                apply_due_events(t0)  # busy-poll: jump to next completion
+            else:
+                break
+
+        stats.makespan_s = max((w.t for w in workers), default=0.0)
+        return results, stats
+
+
+def run_workload(
+    make_coroutine: Callable[[int, np.ndarray], object],
+    queries: np.ndarray,
+    store,
+    cost: CostModel | None = None,
+    ssd: SSD | None = None,
+    n_workers: int = 1,
+    batch_size: int = 8,
+    page_size: int = 4096,
+) -> tuple[list, WorkloadStats]:
+    """Convenience wrapper: build an engine, run all queries, return results+stats."""
+    engine = Engine(
+        store=store,
+        ssd=ssd or SSD(),
+        cost=cost or CostModel(),
+        config=EngineConfig(n_workers=n_workers, batch_size=batch_size, page_size=page_size),
+    )
+    return engine.run(make_coroutine, queries)

@@ -1,0 +1,585 @@
+"""Search algorithms as schedulable coroutines (paper §3.1, §4, Alg. 2).
+
+Every algorithm is a Python generator — the host-plane analogue of a stackless
+coroutine.  It yields engine ops and is resumed with their results:
+
+    ("compute", seconds)                      -> None
+    ("read", [pid, ...])                      -> {pid: page_bytes}   (suspends)
+    ("submit_cb", [pid, ...], callback)       -> None  (fire-and-forget prefetch;
+                                                 callback(pid, bytes) runs at
+                                                 completion time)
+    ("submit", [pid, ...])                    -> [token, ...]  (non-blocking)
+    ("wait_any", {token, ...})                -> (token, pid, page_bytes)
+
+The same generator therefore runs unchanged under the synchronous executor
+(B=1) and the asynchronous scheduler (B>1) — which is exactly the paper's
+claim that the *algorithm* is orthogonal to the execution model, and is what
+tests/test_engine.py asserts (async results == sync results).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from bisect import insort
+
+import numpy as np
+
+from repro.core.quant import RabitQuantizer
+from repro.core.sim import CostModel
+
+
+@dataclasses.dataclass
+class SearchParams:
+    k: int = 10
+    L: int = 64          # candidate list size
+    W: int = 4           # beam width / look-ahead set size
+    cbs: bool = True     # cache-aware beam search (Alg. 2 pivot)
+    prefetch: bool = True
+    prefetch_depth: int = 4
+    pipe_depth: int = 4  # PipeANN in-flight reads
+
+
+@dataclasses.dataclass
+class SearchContext:
+    index: object               # VeloIndex | FixedIndex
+    qb: object                  # QuantizedBase
+    accessor: object            # RecordAccessor | PageAccessor
+    cost: CostModel
+    medoid: int
+    base: np.ndarray | None = None  # only for the in-memory oracle engine
+    # CPU charge for one record refinement: 4-bit dequant distance on the
+    # compressed index, full fp32 distance on the DiskANN-style index.
+    refine_cost_s: float = 0.0
+
+
+@dataclasses.dataclass
+class QueryResult:
+    ids: np.ndarray
+    dists: np.ndarray
+    hops: int
+    reads: int
+
+
+# ------------------------------------------------------------------ accessors
+
+
+class RecordAccessor:
+    """Record-level buffer pool access path (paper §3.2): on miss, read the
+    page, decode ONLY the needed record (plus same-Color co-residents, §3.4),
+    admit them, discard the rest of the page."""
+
+    def __init__(self, index, pool, cost: CostModel, co_admit: bool = True,
+                 track_access: bool = False):
+        self.index = index
+        self.pool = pool
+        self.cost = cost
+        self.co_admit = co_admit
+        self.reads = 0
+        # per-vertex / per-page access counters (Fig. 4 skew study)
+        self.track_access = track_access
+        if track_access:
+            import numpy as _np
+            self.vertex_counts = _np.zeros(index.n, dtype=_np.int64)
+            self.page_counts = _np.zeros(index.store.n_pages, dtype=_np.int64)
+
+    def _track(self, vid: int) -> None:
+        if self.track_access:
+            self.vertex_counts[vid] += 1
+            self.page_counts[self.index.page_of(vid)] += 1
+
+    def resident(self, vid: int) -> bool:
+        return self.pool.peek_resident(vid)
+
+    def _admit_from_page(self, vid: int, page: bytes):
+        rec = self.index.decode_record(vid, page)
+        self.pool.admit(vid, rec)
+        if self.co_admit:
+            for extra in self.index.co_resident_records(vid, page):
+                self.pool.admit(extra.vid, extra)
+        return rec
+
+    def get(self, vid: int):
+        self._track(vid)
+        rec = self.pool.lookup(vid)
+        if rec is not None:
+            return rec
+        pid = self.index.page_of(vid)
+        pages = yield ("read", [pid])
+        self.reads += 1
+        yield ("compute", self.cost.page_parse_s + self.cost.record_decode_s)
+        return self._admit_from_page(vid, pages[pid])
+
+    def get_many(self, vids: list[int]):
+        out: dict[int, object] = {}
+        missing: list[int] = []
+        for v in vids:
+            self._track(v)
+            rec = self.pool.lookup(v)
+            if rec is not None:
+                out[v] = rec
+            else:
+                missing.append(v)
+        if missing:
+            pids = sorted({self.index.page_of(v) for v in missing})
+            pages = yield ("read", pids)
+            self.reads += len(pids)
+            yield (
+                "compute",
+                len(pids) * self.cost.page_parse_s
+                + len(missing) * self.cost.record_decode_s,
+            )
+            for v in missing:
+                out[v] = self._admit_from_page(v, pages[self.index.page_of(v)])
+        return out
+
+    def prefetch_op(self, vid: int):
+        """Return a fire-and-forget op loading vid's record, or None if resident."""
+        if self.pool.peek_resident(vid):
+            return None
+        pid = self.index.page_of(vid)
+
+        def on_complete(_pid: int, page: bytes) -> None:
+            if not self.pool.peek_resident(vid):
+                self._admit_from_page(vid, page)
+
+        return ("submit_cb", [pid], on_complete)
+
+    def stats(self) -> tuple[int, int]:
+        return self.pool.hits, self.pool.misses
+
+
+class PageAccessor:
+    """Page-level cache access path (DiskANN/Starling/PipeANN baselines and the
+    '+Record'-ablated VeloANN variant): whole pages are cached; records are
+    re-parsed out of the cached page on every access."""
+
+    def __init__(self, index, cache, cost: CostModel, track_access: bool = False):
+        self.index = index
+        self.cache = cache
+        self.cost = cost
+        self.reads = 0
+        self.track_access = track_access
+        if track_access:
+            import numpy as _np
+            self.vertex_counts = _np.zeros(index.n, dtype=_np.int64)
+            self.page_counts = _np.zeros(index.store.n_pages, dtype=_np.int64)
+
+    def _track(self, vid: int) -> None:
+        if self.track_access:
+            self.vertex_counts[vid] += 1
+            self.page_counts[self.index.page_of(vid)] += 1
+
+    def resident(self, vid: int) -> bool:
+        return self.cache.contains(self.index.page_of(vid))
+
+    def get(self, vid: int):
+        self._track(vid)
+        pid = self.index.page_of(vid)
+        page = self.cache.lookup(pid)
+        if page is None:
+            pages = yield ("read", [pid])
+            self.reads += 1
+            page = pages[pid]
+            self.cache.admit(pid, page)
+        yield ("compute", self.cost.page_parse_s + self.cost.record_decode_s)
+        return self.index.decode_record(vid, page)
+
+    def get_many(self, vids: list[int]):
+        out: dict[int, object] = {}
+        have: dict[int, bytes] = {}   # pid -> bytes, pinned locally for this step
+        vid_page: dict[int, int] = {}
+        for v in vids:
+            self._track(v)
+            pid = self.index.page_of(v)
+            vid_page[v] = pid
+            if pid not in have:
+                page = self.cache.lookup(pid)
+                if page is not None:
+                    have[pid] = page
+        missing_pids = sorted({p for p in vid_page.values() if p not in have})
+        if missing_pids:
+            got = yield ("read", missing_pids)
+            self.reads += len(missing_pids)
+            for pid, page in got.items():
+                self.cache.admit(pid, page)
+                have[pid] = page
+        yield (
+            "compute",
+            len(vids) * (self.cost.page_parse_s + self.cost.record_decode_s),
+        )
+        for v in vids:
+            out[v] = self.index.decode_record(v, have[vid_page[v]])
+        return out
+
+    def prefetch_op(self, vid: int):
+        pid = self.index.page_of(vid)
+        if self.cache.contains(pid):
+            return None
+
+        def on_complete(_pid: int, page: bytes) -> None:
+            self.cache.admit(pid, page)
+
+        return ("submit_cb", [pid], on_complete)
+
+    def stats(self) -> tuple[int, int]:
+        return self.cache.hits, self.cache.misses
+
+
+# ------------------------------------------------------------------- helpers
+
+
+class _Beam:
+    """Sorted candidate list P with explored/seen tracking (bounded size L)."""
+
+    def __init__(self, L: int):
+        self.L = L
+        self.items: list[tuple[float, int]] = []  # (est_d2, vid), sorted
+        self.seen: set[int] = set()
+        self.explored: set[int] = set()
+
+    def insert(self, vid: int, est: float) -> None:
+        if vid in self.seen:
+            return
+        self.seen.add(vid)
+        insort(self.items, (est, vid))
+        if len(self.items) > 4 * self.L:
+            self.items = self.items[: 2 * self.L]
+
+    def window(self) -> list[tuple[float, int]]:
+        return self.items[: self.L]
+
+    def unexplored(self, limit: int | None = None) -> list[int]:
+        out = []
+        for _, v in self.window():
+            if v not in self.explored:
+                out.append(v)
+                if limit is not None and len(out) >= limit:
+                    break
+        return out
+
+    def mark(self, vid: int) -> None:
+        self.explored.add(vid)
+
+
+def _query_prep_cost(cost: CostModel, d: int) -> float:
+    # rotation via fast transform ~ d log d flops
+    return d * max(1.0, math.log2(d)) * 1e-9
+
+
+def _finish(refined: dict[int, float], k: int) -> tuple[np.ndarray, np.ndarray]:
+    items = sorted(refined.items(), key=lambda kv: (kv[1], kv[0]))[:k]
+    ids = np.asarray([v for v, _ in items], dtype=np.int64)
+    ds = np.asarray([dv for _, dv in items], dtype=np.float32)
+    return ids, ds
+
+
+# ----------------------------------------------------------- VeloANN (Alg. 2)
+
+
+def velo_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """Cache-aware beam search with proactive prefetching (paper Alg. 2)."""
+    cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
+    d = qb.dim
+    yield ("compute", _query_prep_cost(cost, d))
+    pq = RabitQuantizer.prepare_query(qb, q)
+
+    beam = _Beam(p.L)
+    yield ("compute", cost.estimate(1, d))
+    est0 = float(RabitQuantizer.estimate_dist2(qb, pq, np.asarray([ctx.medoid]))[0])
+    beam.insert(ctx.medoid, est0)
+
+    refined: dict[int, float] = {}
+    hops = 0
+    reads0 = acc.reads
+    prefetched: set[int] = set()  # avoid re-submitting in-flight prefetches
+
+    while True:
+        unexp = beam.unexplored(limit=p.W)
+        if not unexp:
+            break
+        v = unexp[0]  # top-1 nearest unexplored (Alg. 2 line 5)
+
+        if p.cbs and not acc.resident(v):
+            # Alg. 2 lines 8-14: pivot to the first in-memory candidate in the
+            # look-ahead set C; prefetch on-disk members of C.
+            pivot = None
+            for c in unexp:
+                if pivot is None and acc.resident(c):
+                    pivot = c
+                elif p.prefetch and c not in prefetched:
+                    op = acc.prefetch_op(c)
+                    if op is not None:
+                        prefetched.add(c)
+                        yield ("compute", cost.io_submit_s)
+                        yield op
+            if pivot is not None:
+                v = pivot
+        elif p.prefetch:
+            # §4.1 stride prefetch of the top-B frontier candidates
+            for c in unexp[1 : 1 + p.prefetch_depth]:
+                if c in prefetched:
+                    continue
+                op = acc.prefetch_op(c)
+                if op is not None:
+                    prefetched.add(c)
+                    yield ("compute", cost.io_submit_s)
+                    yield op
+
+        rec = yield from acc.get(v)  # suspends on miss (Alg. 2 line 17)
+        yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
+        refined[v] = ctx.index.refine_dist2(pq, rec)
+        beam.mark(v)
+        hops += 1
+
+        fresh = [int(u) for u in rec.adjacency if int(u) not in beam.seen]
+        if fresh:
+            yield ("compute", cost.estimate(len(fresh), d))
+            ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
+            for u, e in zip(fresh, ests):
+                beam.insert(u, float(e))
+
+    ids, ds = _finish(refined, p.k)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
+
+
+# ------------------------------------------------- DiskANN-style beam search
+
+
+def diskann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """Synchronous beam search [23]: at each step fetch the top-W unexplored
+    candidates with one batched read (bottlenecked by the slowest read)."""
+    cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
+    d = qb.dim
+    yield ("compute", _query_prep_cost(cost, d))
+    pq = RabitQuantizer.prepare_query(qb, q)
+
+    beam = _Beam(p.L)
+    yield ("compute", cost.estimate(1, d))
+    est0 = float(RabitQuantizer.estimate_dist2(qb, pq, np.asarray([ctx.medoid]))[0])
+    beam.insert(ctx.medoid, est0)
+
+    refined: dict[int, float] = {}
+    hops = 0
+    reads0 = acc.reads
+
+    while True:
+        batch = beam.unexplored(limit=max(1, p.W))
+        if not batch:
+            break
+        recs = yield from acc.get_many(batch)
+        for v in batch:
+            rec = recs[v]
+            yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
+            refined[v] = ctx.index.refine_dist2(pq, rec)
+            beam.mark(v)
+            hops += 1
+            fresh = [int(u) for u in rec.adjacency if int(u) not in beam.seen]
+            if fresh:
+                yield ("compute", cost.estimate(len(fresh), d))
+                ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
+                for u, e in zip(fresh, ests):
+                    beam.insert(u, float(e))
+
+    ids, ds = _finish(refined, p.k)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
+
+
+# ------------------------------------------------ Starling-style block search
+
+
+def starling_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """DiskANN beam + block search: every fetched page's co-resident records
+    are refined and expanded for free (exploits the shuffled layout)."""
+    cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
+    index = ctx.index
+    d = qb.dim
+    yield ("compute", _query_prep_cost(cost, d))
+    pq = RabitQuantizer.prepare_query(qb, q)
+
+    beam = _Beam(p.L)
+    yield ("compute", cost.estimate(1, d))
+    est0 = float(RabitQuantizer.estimate_dist2(qb, pq, np.asarray([ctx.medoid]))[0])
+    beam.insert(ctx.medoid, est0)
+
+    refined: dict[int, float] = {}
+    hops = 0
+    reads0 = acc.reads
+
+    def expand(rec) -> list:
+        fresh = [int(u) for u in rec.adjacency if int(u) not in beam.seen]
+        return fresh
+
+    while True:
+        batch = beam.unexplored(limit=max(1, p.W))
+        if not batch:
+            break
+        recs = yield from acc.get_many(batch)
+        extra_vids: list[int] = []
+        for v in batch:
+            pid = index.page_of(v)
+            for u in index.page_record_ids(pid):
+                if u not in beam.explored and u not in batch:
+                    extra_vids.append(u)
+        for v in batch + extra_vids:
+            if v in beam.explored:
+                continue
+            if v in recs:
+                rec = recs[v]
+            else:
+                # co-resident record: page is cached now, no I/O
+                rec = yield from acc.get(v)
+            yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
+            dist = ctx.index.refine_dist2(pq, rec)
+            # block-search filter: only keep co-resident records that would
+            # enter the current candidate window
+            if v in extra_vids:
+                window = beam.window()
+                if window and len(window) >= p.L and dist >= window[-1][0]:
+                    continue
+            refined[v] = dist
+            beam.mark(v)
+            beam.insert(v, dist)
+            hops += 1
+            fresh = expand(rec)
+            if fresh:
+                yield ("compute", cost.estimate(len(fresh), d))
+                ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
+                for u, e in zip(fresh, ests):
+                    beam.insert(u, float(e))
+
+    ids, ds = _finish(refined, p.k)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
+
+
+# -------------------------------------------------- PipeANN-style pipelining
+
+
+def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """Pipelined best-first search [15]: keep up to `pipe_depth` reads in
+    flight and process completions in arrival order (relaxed ordering) —
+    lower latency, some wasted I/O."""
+    cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
+    index = ctx.index
+    d = qb.dim
+    yield ("compute", _query_prep_cost(cost, d))
+    pq = RabitQuantizer.prepare_query(qb, q)
+
+    beam = _Beam(p.L)
+    yield ("compute", cost.estimate(1, d))
+    est0 = float(RabitQuantizer.estimate_dist2(qb, pq, np.asarray([ctx.medoid]))[0])
+    beam.insert(ctx.medoid, est0)
+
+    refined: dict[int, float] = {}
+    hops = 0
+    reads0 = acc.reads
+    outstanding: dict[int, int] = {}  # token -> vid
+    inflight: set[int] = set()
+
+    def process(v, rec):
+        nonlocal hops
+        refined[v] = ctx.index.refine_dist2(pq, rec)
+        beam.mark(v)
+        hops += 1
+        return [int(u) for u in rec.adjacency if int(u) not in beam.seen]
+
+    while True:
+        # fill the pipeline with the best unexplored, uninflight candidates
+        cands = [v for v in beam.unexplored() if v not in inflight]
+        while len(outstanding) < p.pipe_depth and cands:
+            v = cands.pop(0)
+            if acc.resident(v):
+                rec = yield from acc.get(v)
+                yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
+                fresh = process(v, rec)
+                if fresh:
+                    yield ("compute", cost.estimate(len(fresh), d))
+                    ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
+                    for u, e in zip(fresh, ests):
+                        beam.insert(u, float(e))
+                cands = [x for x in beam.unexplored() if x not in inflight]
+                continue
+            pid = index.page_of(v)
+            yield ("compute", cost.io_submit_s)
+            tokens = yield ("submit", [pid])
+            outstanding[tokens[0]] = v
+            inflight.add(v)
+
+        if not outstanding:
+            if not beam.unexplored():
+                break
+            continue
+
+        token, pid, page = yield ("wait_any", set(outstanding))
+        v = outstanding.pop(token)
+        inflight.discard(v)
+        acc.reads += 1
+        if hasattr(acc, "cache"):
+            acc.cache.admit(pid, page)
+        yield ("compute", cost.page_parse_s + cost.record_decode_s)
+        rec = index.decode_record(v, page)
+        if hasattr(acc, "pool"):
+            acc.pool.admit(v, rec)
+        if v in beam.explored:
+            continue  # over-fetched: candidate already pruned/processed
+        yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
+        fresh = process(v, rec)
+        if fresh:
+            yield ("compute", cost.estimate(len(fresh), d))
+            ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
+            for u, e in zip(fresh, ests):
+                beam.insert(u, float(e))
+
+    ids, ds = _finish(refined, p.k)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
+
+
+# -------------------------------------------------------- in-memory Vamana
+
+
+def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """Fully in-memory Vamana greedy beam search — the paper's Fig. 1/12
+    reference point.  Exact fp32 distances, no I/O ever."""
+    assert ctx.base is not None
+    cost = ctx.cost
+    base = ctx.base
+    d = base.shape[1]
+    graph = ctx.index.graph
+
+    def dist(v: int) -> float:
+        diff = base[v] - q
+        return float(diff @ diff)
+
+    beam = _Beam(p.L)
+    yield ("compute", cost.refine_full(d))
+    beam.insert(ctx.medoid, dist(ctx.medoid))
+    hops = 0
+    while True:
+        unexp = beam.unexplored(limit=1)
+        if not unexp:
+            break
+        v = unexp[0]
+        beam.mark(v)
+        hops += 1
+        nbrs = [int(u) for u in graph.neighbors(v) if int(u) not in beam.seen]
+        if nbrs:
+            yield ("compute", len(nbrs) * cost.refine_full(d) + cost.visit_overhead_s)
+            dd = base[np.asarray(nbrs)] - q
+            d2 = np.einsum("ij,ij->i", dd, dd)
+            for u, e in zip(nbrs, d2):
+                beam.insert(u, float(e))
+
+    # every beam entry carries an exact distance here
+    topk = beam.items[: p.k]
+    ids = np.asarray([v for _, v in topk], dtype=np.int64)
+    ds = np.asarray([e for e, _ in topk], dtype=np.float32)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=0)
+
+
+ALGORITHMS = {
+    "velo": velo_search,
+    "diskann": diskann_search,
+    "starling": starling_search,
+    "pipeann": pipeann_search,
+    "inmemory": inmemory_search,
+}

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel directory contains:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, dtype dispatch, cost hints)
+  ref.py    — pure-jnp oracle used by tests/test_kernels_*.py
+
+Kernels:
+  binary_ip       RaBitQ level-1: query x packed 1-bit codes as a sign GEMM
+                  on the MXU (the TPU-native replacement for popcount Hamming)
+  int4_dist       RaBitQ level-2: packed 4-bit dequant + squared-L2 refine
+  flash_attention LM prefill attention (causal / sliding window / bidir, GQA)
+  paged_attention LM decode through a record-level KV block table — the
+                  paper's record_map indirection applied to the KV cache
+"""

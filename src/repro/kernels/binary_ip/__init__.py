@@ -1,0 +1,1 @@
+from repro.kernels.binary_ip.ops import binary_ip, estimate_dist2  # noqa: F401

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: query x packed-1-bit-code inner products as a sign GEMM.
+
+Hardware adaptation (DESIGN.md §2): on CPUs RaBitQ's level-1 distance is a
+popcount-Hamming loop; the TPU has no popcount but has a 128x128 systolic MXU.
+We therefore unpack the bit codes to {-1,+1} lanes *inside VMEM* and issue a
+dense GEMM — arithmetic intensity d/8 bytes -> 2d flops per code row makes
+this compute-bound on the MXU for d >= 128, which is exactly where we want
+the level-1 scan to sit.
+
+Tiling: queries (BQ=128 rows) x codes (BN=256 rows) per grid cell; the full
+code row (d/8 bytes, d <= 2048) lives in VMEM: VMEM use per cell =
+BQ*d*4 + BN*d/8 + BQ*BN*4 ~= 1.4 MB at d=1024 — comfortably under 16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BQ = 128
+DEFAULT_BN = 256
+
+
+def _binary_ip_kernel(q_ref, codes_ref, out_ref):
+    q = q_ref[...]                                 # (BQ, d) f32
+    c = codes_ref[...].astype(jnp.int32)           # (BN, d/8) u8 -> i32
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (c[:, :, None] >> shifts[None, None, :]) & 1
+    signs = (2 * bits - 1).reshape(c.shape[0], -1).astype(jnp.float32)  # (BN, d)
+    out_ref[...] = jax.lax.dot_general(
+        q.astype(jnp.float32),
+        signs,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def binary_ip_pallas(
+    q: jnp.ndarray,        # (B, d) float
+    codes: jnp.ndarray,    # (N, d/8) uint8
+    bq: int = DEFAULT_BQ,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, d = q.shape
+    N, d8 = codes.shape
+    assert d == d8 * 8
+    assert B % bq == 0 and N % bn == 0, "caller (ops.py) pads to tile multiples"
+
+    grid = (B // bq, N // bn)
+    return pl.pallas_call(
+        _binary_ip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d8), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=interpret,
+    )(q, codes)

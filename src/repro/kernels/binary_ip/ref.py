@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the binary inner-product kernel."""
+
+import jax.numpy as jnp
+
+
+def unpack_signs(codes: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(N, d/8) uint8 (little-endian bits) -> (N, d) {-1,+1} float32."""
+    c = codes.astype(jnp.int32)
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (c[:, :, None] >> shifts[None, None, :]) & 1  # (N, d/8, 8)
+    bits = bits.reshape(codes.shape[0], -1)[:, :d]
+    return (2 * bits - 1).astype(jnp.float32)
+
+
+def binary_ip_ref(q: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """<q_b, sign_n> for every query x code row.
+
+    q:     (B, d) float
+    codes: (N, d/8) uint8 (np.packbits bitorder='little')
+    out:   (B, N) float32
+    """
+    d = q.shape[1]
+    signs = unpack_signs(codes, d)
+    return q.astype(jnp.float32) @ signs.T
+
+
+def estimate_dist2_ref(
+    q: jnp.ndarray,           # (B, d) rotated centered queries
+    codes: jnp.ndarray,       # (N, d/8) uint8
+    norms: jnp.ndarray,       # (N,)
+    ip_bar: jnp.ndarray,      # (N,)
+) -> jnp.ndarray:
+    """Full RaBitQ level-1 distance estimate (matches core.quant numpy path)."""
+    d = q.shape[1]
+    qnorm = jnp.linalg.norm(q, axis=1, keepdims=True)          # (B, 1)
+    qunit = q / jnp.maximum(qnorm, 1e-12)
+    g = binary_ip_ref(qunit, codes) / jnp.sqrt(jnp.float32(d))  # (B, N)
+    est_cos = jnp.clip(g / jnp.maximum(ip_bar[None, :], 1e-6), -1.0, 1.0)
+    return qnorm**2 + norms[None, :] ** 2 - 2.0 * qnorm * norms[None, :] * est_cos

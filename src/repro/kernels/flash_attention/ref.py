@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: multi-head attention with GQA + causal/sliding-window masks."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,   # (B, H, Sq, Dh)
+    k: jnp.ndarray,   # (B, KVH, Skv, Dh)
+    v: jnp.ndarray,   # (B, KVH, Skv, Dh)
+    causal: bool = True,
+    window: int | None = None,   # sliding window size (None = full)
+    scale: float | None = None,
+) -> jnp.ndarray:
+    B, H, Sq, Dh = q.shape
+    KVH = k.shape[1]
+    Skv = k.shape[2]
+    assert H % KVH == 0
+    group = H // KVH
+    scale = scale if scale is not None else Dh**-0.5
+
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    logits = logits * scale
+
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)  # align last query with last key
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32)).astype(q.dtype)

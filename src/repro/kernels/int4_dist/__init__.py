@@ -1,0 +1,1 @@
+from repro.kernels.int4_dist.ops import int4_dist2  # noqa: F401

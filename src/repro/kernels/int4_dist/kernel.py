@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: packed-4-bit dequant + squared-L2 distances.
+
+RaBitQ level-2 refinement (paper §3.3): once a record's extended code reaches
+the device tier, distances are computed against the 4-bit reconstruction.
+The dequant (two nibbles per byte, per-record scale/offset) happens in VMEM
+right before the MXU contraction, so HBM only ever carries d/2 bytes per
+record — the same bytes the paper's SSD carries.
+
+Tiling mirrors binary_ip: BQ x BN grid cells, full d in VMEM.
+VMEM per cell at d=1024: BQ*d*4 + BN*(d/2) + BN*d*4 (dequant buffer)
++ BQ*BN*4 ~= 1.8 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BQ = 128
+DEFAULT_BN = 128
+
+
+def _int4_dist_kernel(q_ref, codes_ref, lo_ref, step_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)             # (BQ, d)
+    c = codes_ref[...].astype(jnp.int32)           # (BN, d/2)
+    lo = lo_ref[...].astype(jnp.float32)           # (BN, 1)
+    step = step_ref[...].astype(jnp.float32)       # (BN, 1)
+
+    lo4 = (c & 0xF).astype(jnp.float32)
+    hi4 = ((c >> 4) & 0xF).astype(jnp.float32)
+    codes = jnp.stack([lo4, hi4], axis=-1).reshape(c.shape[0], -1)  # (BN, d)
+    x = codes * step + lo                          # dequant in VMEM
+
+    qn = jnp.sum(q * q, axis=1, keepdims=True)     # (BQ, 1)
+    xn = jnp.sum(x * x, axis=1)                    # (BN,)
+    ip = jax.lax.dot_general(
+        q, x, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (BQ, BN)
+    out_ref[...] = qn - 2.0 * ip + xn[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def int4_dist_pallas(
+    q: jnp.ndarray,        # (B, d)
+    codes: jnp.ndarray,    # (N, d/2) uint8
+    lo: jnp.ndarray,       # (N, 1) float32
+    step: jnp.ndarray,     # (N, 1) float32
+    bq: int = DEFAULT_BQ,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, d = q.shape
+    N, d2 = codes.shape
+    assert d == d2 * 2
+    assert B % bq == 0 and N % bn == 0
+
+    grid = (B // bq, N // bn)
+    return pl.pallas_call(
+        _int4_dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=interpret,
+    )(q, codes, lo, step)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the 4-bit dequant + squared-L2 refinement kernel."""
+
+import jax.numpy as jnp
+
+
+def unpack_nibbles(packed: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(N, d/2) uint8 -> (N, d) float32 codes in [0, 15] (low nibble = even dim)."""
+    c = packed.astype(jnp.int32)
+    lo = c & 0xF
+    hi = (c >> 4) & 0xF
+    inter = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    return inter[:, :d].astype(jnp.float32)
+
+
+def int4_dist2_ref(
+    q: jnp.ndarray,        # (B, d) rotated centered queries, float
+    codes: jnp.ndarray,    # (N, d/2) uint8 packed nibbles
+    lo: jnp.ndarray,       # (N,) per-record range low
+    step: jnp.ndarray,     # (N,) per-record step
+) -> jnp.ndarray:
+    """||q_b - dequant(code_n)||^2 for every pair -> (B, N) float32."""
+    d = q.shape[1]
+    x = unpack_nibbles(codes, d) * step[:, None] + lo[:, None]  # (N, d)
+    qn = (q.astype(jnp.float32) ** 2).sum(axis=1, keepdims=True)
+    xn = (x**2).sum(axis=1)
+    ip = q.astype(jnp.float32) @ x.T
+    return qn - 2.0 * ip + xn[None, :]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for decode attention through a KV block table."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,            # (B, H, Dh) one new token per sequence
+    k_pages: jnp.ndarray,      # (P, page, KVH, Dh) global KV page pool
+    v_pages: jnp.ndarray,      # (P, page, KVH, Dh)
+    block_tables: jnp.ndarray,  # (B, max_pages) int32 page ids (record_map analogue)
+    context_lens: jnp.ndarray,  # (B,) int32 tokens present per sequence
+    scale: float | None = None,
+) -> jnp.ndarray:
+    B, H, Dh = q.shape
+    P, page, KVH, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    group = H // KVH
+    scale = scale if scale is not None else Dh**-0.5
+
+    # gather each sequence's logical KV: (B, max_pages*page, KVH, Dh)
+    k = k_pages[block_tables]  # (B, max_pages, page, KVH, Dh)
+    v = v_pages[block_tables]
+    k = k.reshape(B, max_pages * page, KVH, Dh)
+    v = v.reshape(B, max_pages * page, KVH, Dh)
+
+    kk = jnp.repeat(k, group, axis=2)  # (B, S, H, Dh)
+    vv = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kk.astype(jnp.float32))
+    logits *= scale
+    pos = jnp.arange(max_pages * page)[None, :]
+    mask = pos < context_lens[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", p, vv.astype(jnp.float32)).astype(q.dtype)

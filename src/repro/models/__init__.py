@@ -1,0 +1,14 @@
+"""Assigned LM architectures (10) as one composable model framework.
+
+  config.py   — ModelConfig covering dense/GQA, MoE, Mamba-hybrid, RWKV6,
+                enc-dec, VLM-stub families
+  layers.py   — rmsnorm, rope, swiglu, chunked flash-style attention (pure
+                jnp, lax.scan over KV blocks: compact HLO + linear memory),
+                decode attention
+  moe.py      — capacity-based top-k routing (sort dispatch, real-FLOP experts)
+  mamba.py    — Mamba-1 selective SSM block (jamba's recurrent layer)
+  rwkv.py     — RWKV-6 "Finch" block (data-dependent decay)
+  blocks.py   — per-family layer groups (init + apply)
+  model.py    — stacked model: init / train forward / prefill / decode
+  sharding.py — parameter & activation partition specs per mesh
+"""

@@ -1,0 +1,264 @@
+"""Per-layer blocks: init + sequence apply (train/prefill) + decode apply.
+
+A layer is described by a LayerSpec (static): kind (attn|mamba|rwkv), sliding
+window, MoE-ness, cross-attention.  model.py stacks layers into scan groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MoE
+from repro.models import rwkv as R
+from repro.models import sharding as Sh
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str            # attn | mamba | rwkv
+    window: int          # 0 = global
+    is_moe: bool
+    cross: bool = False  # decoder cross-attention (whisper)
+    causal: bool = True  # False for encoder self-attention
+
+    @staticmethod
+    def of(cfg: ModelConfig, i: int) -> "LayerSpec":
+        return LayerSpec(
+            kind=cfg.layer_kind(i),
+            window=cfg.layer_window(i),
+            is_moe=cfg.layer_is_moe(i),
+            cross=cfg.cross_attention,
+        )
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------- init
+
+
+def init_attention(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    d, H, KVH, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(kq, (d, H * dh), dtype=dt),
+        "wk": L.init_linear(kk, (d, KVH * dh), dtype=dt),
+        "wv": L.init_linear(kv, (d, KVH * dh), dtype=dt),
+        "wo": L.init_linear(ko, (H * dh, d), scale=(H * dh) ** -0.5, dtype=dt),
+    }
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": jnp.ones((d,), jnp.float32)}
+    if spec.kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg)
+    elif spec.kind == "mamba":
+        p["mamba"] = M.init_mamba(
+            ks[0], d, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv, dt
+        )
+    elif spec.kind == "rwkv":
+        p["rwkv"] = R.init_rwkv(ks[0], d, cfg.d_ff, cfg.n_heads, dt)
+        return p  # rwkv block: time mix + channel mix only
+    else:
+        raise ValueError(spec.kind)
+
+    if spec.cross:
+        p["norm_x"] = jnp.ones((d,), jnp.float32)
+        p["cross"] = init_attention(ks[1], cfg)
+
+    p["norm2"] = jnp.ones((d,), jnp.float32)
+    if spec.is_moe:
+        p["moe"] = MoE.init_moe(
+            ks[2], d, cfg.d_ff, cfg.n_experts, cfg.n_shared_experts, dt
+        )
+    else:
+        dff = cfg.d_ff_dense or cfg.d_ff
+        kg, ku, kd = jax.random.split(ks[3], 3)
+        p["ffn"] = {
+            "w_gate": L.init_linear(kg, (d, dff), dtype=dt),
+            "w_up": L.init_linear(ku, (d, dff), dtype=dt),
+            "w_down": L.init_linear(kd, (dff, d), scale=dff**-0.5, dtype=dt),
+        }
+    return p
+
+
+# ------------------------------------------------------------------ seq apply
+
+
+def _attn_seq(p, x, cfg, window, positions, kv_override=None, causal=True):
+    B, S, d = x.shape
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    if kv_override is None:
+        k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, KVH, dh).transpose(0, 2, 1, 3)
+        v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, KVH, dh).transpose(0, 2, 1, 3)
+        if causal:  # rope only on the decoder path (whisper enc uses none)
+            q = L.rope(q, positions[:, None, :], cfg.rope_theta)
+            k = L.rope(k, positions[:, None, :], cfg.rope_theta)
+    else:
+        # cross-attention: kv from the encoder sequence (no rope, bidirectional)
+        k, v = kv_override
+        causal = False
+    out = L.chunked_attention(q, k, v, causal=causal, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * dh)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), (k, v)
+
+
+def cross_kv(p_attn, enc_states, cfg):
+    """Project encoder states to this layer's cross K/V: (B, KVH, T, dh)."""
+    B, T, _ = enc_states.shape
+    KVH, dh = cfg.n_kv_heads, cfg.d_head
+    k = jnp.einsum("btd,de->bte", enc_states, p_attn["wk"]).reshape(B, T, KVH, dh)
+    v = jnp.einsum("btd,de->bte", enc_states, p_attn["wv"]).reshape(B, T, KVH, dh)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def _ffn_or_moe(p, x, cfg, spec):
+    B, S, d = x.shape
+    if spec.is_moe:
+        out, aux = MoE.moe_ffn_auto(
+            p["moe"], x.reshape(B * S, d), cfg.moe_top_k, cfg.capacity_factor
+        )
+        return out.reshape(B, S, d), aux
+    return L.swiglu(x, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"]), jnp.float32(0.0)
+
+
+def layer_seq(
+    p, x, cfg: ModelConfig, spec: LayerSpec, positions, enc_states=None, want_cache=False
+):
+    """x (B, S, d) -> (x, cache, aux). cache=None unless want_cache."""
+    aux = jnp.float32(0.0)
+    cache = None
+    x = Sh.constrain_act(x)  # anchor the residual-stream layout (Megatron DP)
+    if spec.kind == "attn":
+        h, (k, v) = _attn_seq(
+            p["attn"], L.rmsnorm(x, p["norm1"], cfg.norm_eps), cfg, spec.window,
+            positions, causal=spec.causal,
+        )
+        x = x + h
+        if want_cache:
+            cache = {"k": k, "v": v}
+        if spec.cross:
+            assert enc_states is not None
+            ck, cv = cross_kv(p["cross"], enc_states, cfg)
+            hx, _ = _attn_seq(
+                p["cross"], L.rmsnorm(x, p["norm_x"], cfg.norm_eps),
+                cfg, 0, positions, kv_override=(ck, cv),
+            )
+            x = x + hx
+            if want_cache:
+                cache = dict(cache or {}, ck=ck, cv=cv)
+        h, aux = _ffn_or_moe(p, L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg, spec)
+        x = Sh.constrain_act(x + h)
+    elif spec.kind == "mamba":
+        h = M.mamba_seq(p["mamba"], L.rmsnorm(x, p["norm1"], cfg.norm_eps))
+        x = x + h
+        if want_cache:
+            # final recurrent state: recomputed cheaply at decode start; for the
+            # dry-run we hand back zeros-shaped state (prefill->decode handoff)
+            B = x.shape[0]
+            cache = {
+                "conv": jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner), x.dtype),
+                "ssm": jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            }
+        h, aux = _ffn_or_moe(p, L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg, spec)
+        x = Sh.constrain_act(x + h)
+    elif spec.kind == "rwkv":
+        x = x + R.time_mix_seq(p["rwkv"], x, cfg.n_heads)
+        x = x + R.channel_mix_seq(p["rwkv"], x)
+        if want_cache:
+            B, D = x.shape[0], cfg.d_model
+            dh = D // cfg.n_heads
+            cache = {
+                "tshift": jnp.zeros((B, D), jnp.float32),
+                "wkv": jnp.zeros((B, cfg.n_heads, dh, dh), jnp.float32),
+                "cshift": jnp.zeros((B, D), jnp.float32),
+            }
+    return x, cache, aux
+
+
+# --------------------------------------------------------------- decode apply
+
+
+def _attn_decode(p, x, cfg, window, cache, pos, enc_kv=None):
+    """x (B, d); cache k/v (B, KVH, S, dh); writes the new token at `pos`."""
+    B, d = x.shape
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    klen = cache["k"].shape[2]
+    q = (x @ p["wq"]).reshape(B, H, dh)
+    k_new = (x @ p["wk"]).reshape(B, KVH, dh)
+    v_new = (x @ p["wv"]).reshape(B, KVH, dh)
+    posb = jnp.full((B, 1), pos)
+    q = L.rope(q[:, :, None, :], posb[:, None, :], cfg.rope_theta)[:, :, 0, :]
+    k_new = L.rope(k_new[:, :, None, :], posb[:, None, :], cfg.rope_theta)[:, :, 0, :]
+    # Sliding-window layers use a ROLLING cache of klen <= window+1 slots
+    # (gemma3/jamba long-context serving): the write index wraps; once full,
+    # every slot is a valid in-window key.  Exact in both regimes: before the
+    # wrap, context_len=pos+1 masks unwritten slots; after it, all klen slots
+    # are in-window by construction (RoPE carries absolute positions and
+    # softmax is order-invariant).
+    write_idx = pos % klen if window > 0 else pos
+    ctx = jnp.minimum(pos + 1, klen)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new[:, :, None, :], write_idx, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new[:, :, None, :], write_idx, axis=2)
+    out = L.decode_attention(q, k, v, context_len=ctx, window=0)
+    out = out.reshape(B, H * dh) @ p["wo"]
+    return out, {"k": k, "v": v}
+
+
+def layer_decode(p, x, cfg: ModelConfig, spec: LayerSpec, cache, pos):
+    """x (B, d) one token -> (x, new_cache, aux). Cross K/V come from the cache
+    (computed once at prefill — the paper's 'decode prefers resident data')."""
+    aux = jnp.float32(0.0)
+    if spec.kind == "attn":
+        new_cache = dict(cache)
+        attn_cache = {"k": cache["k"], "v": cache["v"]}
+        h, attn_cache = _attn_decode(
+            p["attn"], L.rmsnorm(x, p["norm1"], cfg.norm_eps), cfg, spec.window,
+            attn_cache, pos,
+        )
+        new_cache.update(attn_cache)
+        cache = new_cache
+        x = x + h
+        if spec.cross:
+            B, d = x.shape
+            H, dh = cfg.n_heads, cfg.d_head
+            xq = L.rmsnorm(x, p["norm_x"], cfg.norm_eps)
+            q = (xq @ p["cross"]["wq"]).reshape(B, H, dh)
+            out = L.decode_attention(q, cache["ck"], cache["cv"], context_len=cache["ck"].shape[2])
+            x = x + out.reshape(B, H * dh) @ p["cross"]["wo"]
+        xf = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if spec.is_moe:
+            h, aux = MoE.moe_ffn_auto(p["moe"], xf, cfg.moe_top_k, cfg.capacity_factor)
+        else:
+            h = L.swiglu(xf[:, None, :], p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"])[:, 0]
+        x = x + h
+    elif spec.kind == "mamba":
+        state = (cache["conv"], cache["ssm"])
+        state, h = M.mamba_decode(p["mamba"], state, L.rmsnorm(x, p["norm1"], cfg.norm_eps))
+        cache = {"conv": state[0], "ssm": state[1]}
+        x = x + h
+        xf = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if spec.is_moe:
+            h, aux = MoE.moe_ffn_auto(p["moe"], xf, cfg.moe_top_k, cfg.capacity_factor)
+        else:
+            h = L.swiglu(xf[:, None, :], p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"])[:, 0]
+        x = x + h
+    elif spec.kind == "rwkv":
+        ts, wkv, out = R.time_mix_decode(p["rwkv"], cache["tshift"], cache["wkv"], x, cfg.n_heads)
+        x = x + out
+        cs, out2 = R.channel_mix_decode(p["rwkv"], cache["cshift"], x)
+        x = x + out2
+        cache = {"tshift": ts, "wkv": wkv, "cshift": cs}
+    return x, cache, aux

@@ -1,0 +1,187 @@
+"""Shared neural layers: norms, rope, attention (chunked flash-style, pure jnp).
+
+The prefill/train attention streams over KV blocks with `jax.lax.scan` and an
+online softmax — the same recurrence as kernels/flash_attention but expressed
+in XLA ops, because (a) the dry-run lowers for a CPU-hosted 512-device mesh
+where a TPU Pallas kernel cannot compile and interpret mode would unroll the
+grid into the HLO, and (b) lax.scan keeps the HLO compact (one body) and the
+peak memory linear in block size, which is what makes prefill_32k and
+long_500k lowerable at all.  On real TPUs the model flips to the Pallas path
+via `use_kernel=True` (tested in interpret mode on small shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+# --------------------------------------------------------------- attention
+
+
+def chunked_attention(
+    q: jnp.ndarray,        # (B, H, Sq, Dh)
+    k: jnp.ndarray,        # (B, KVH, Skv, Dh)
+    v: jnp.ndarray,        # (B, KVH, Skv, Dh)
+    causal: bool = True,
+    window: int = 0,       # 0 = full
+    block: int = 512,
+    q_offset: int | None = None,  # key position of query row 0
+) -> jnp.ndarray:
+    """Flash-style streaming attention in pure jnp (lax.scan over KV blocks)."""
+    B, H, Sq, Dh = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    group = H // KVH
+    scale = Dh**-0.5
+    q_offset = q_offset if q_offset is not None else (Skv - Sq)
+    block = min(block, Skv)
+    nb = -(-Skv // block)
+    pad = nb * block - Skv
+
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    # fold blocks: (nb, B, KVH, block, Dh)
+    kb = kp.reshape(B, KVH, nb, block, Dh).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, KVH, nb, block, Dh).transpose(2, 0, 1, 3, 4)
+
+    q32 = (q * scale).astype(jnp.float32)
+    q_pos = jnp.arange(Sq) + q_offset
+
+    def body(carry, blk):
+        m, l, acc, bi = carry
+        kblk, vblk = blk  # (B, KVH, block, Dh)
+        kk = jnp.repeat(kblk, group, axis=1).astype(jnp.float32)
+        vv = jnp.repeat(vblk, group, axis=1).astype(jnp.float32)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q32, kk)
+        k_pos = bi * block + jnp.arange(block)
+        mask = (k_pos[None, :] < Skv)
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+        return (m_new, l_new, acc_new, bi + 1), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dh), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, H, Dh) one token
+    k: jnp.ndarray,        # (B, KVH, S, Dh) cache
+    v: jnp.ndarray,
+    context_len: jnp.ndarray | int,  # () or (B,) valid tokens
+    window: int = 0,
+) -> jnp.ndarray:
+    """Single-token decode attention over a (possibly sharded) KV cache.
+
+    Expressed as plain einsum/softmax so pjit can shard S (the long_500k path
+    shards the cache sequence axis over 'data' and inserts the softmax
+    reductions' collectives automatically)."""
+    B, H, Dh = q.shape
+    KVH, S = k.shape[1], k.shape[2]
+    group = H // KVH
+    scale = Dh**-0.5
+    kk = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32) * scale, kk)
+    pos = jnp.arange(S)[None, :]
+    ctx = jnp.asarray(context_len).reshape(-1, 1) if jnp.ndim(context_len) else jnp.full((1, 1), context_len)
+    mask = pos < ctx
+    if window > 0:
+        mask = mask & (pos > ctx - 1 - window)
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", p, vv).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- embedding
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def chunked_ce_loss(
+    h: jnp.ndarray,          # (B, S, D) final hidden states
+    labels: jnp.ndarray,     # (B, S) int32, -100 = ignore
+    unembed: jnp.ndarray,    # (D, V)
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Cross-entropy without materializing (B, S, V) logits: scan over S chunks.
+
+    Keeps peak activation memory ~ B*chunk*V_shard, which is what makes
+    train_4k lowerable for 64k-262k vocabularies."""
+    B, S, D = h.shape
+    nb = -(-S // chunk)
+    pad = nb * chunk - S
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    hb = hp.reshape(B, nb, chunk, D).transpose(1, 0, 2, 3)
+    lb = lp.reshape(B, nb, chunk).transpose(1, 0, 2)
+
+    def body(carry, blk):
+        tot, cnt = carry
+        hh, ll = blk
+        logits = jnp.einsum("bsd,dv->bsv", hh.astype(jnp.float32), unembed.astype(jnp.float32))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ll, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = ll >= 0
+        tot = tot + jnp.sum(jnp.where(valid, logz - gold, 0.0))
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), (hb, lb)
+    )
+    return tot / jnp.maximum(cnt, 1)
+
+
+def init_linear(key, shape, scale=None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

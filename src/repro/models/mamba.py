@@ -1,0 +1,187 @@
+"""Mamba-1 selective SSM block (jamba's recurrent layer) [arXiv:2312.00752].
+
+Sequence path uses a sequential lax.scan over time with state (B, d_inner, N):
+compact HLO (one body) and exact recurrence semantics.  A fused chunked-scan
+Pallas kernel is the production TPU path for this hot spot; the dry-run cost
+model of the sequential scan is conservative (noted in DESIGN.md / §Perf).
+Decode is the same cell applied once to carried (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mamba(key, d_model: int, d_inner: int, N: int, dt_rank: int, K: int, dtype):
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": L.init_linear(ks[0], (d_model, 2 * d_inner), dtype=dtype),
+        "conv_w": L.init_linear(ks[1], (K, d_inner), scale=K**-0.5, dtype=dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_dt1": L.init_linear(ks[2], (d_inner, dt_rank), dtype=dtype),
+        "w_dt2": L.init_linear(ks[3], (dt_rank, d_inner), scale=dt_rank**-0.5, dtype=dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "w_B": L.init_linear(ks[4], (d_inner, N), dtype=dtype),
+        "w_C": L.init_linear(ks[5], (d_inner, N), dtype=dtype),
+        "A_log": jnp.log(
+            jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (d_inner, 1))
+        ),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": L.init_linear(ks[6], (d_inner, d_model), scale=d_inner**-0.5, dtype=dtype),
+    }
+
+
+def _cell(p, h, x_t, dt_t, B_t, C_t):
+    """One recurrence step. h (B, di, N); x_t, dt_t (B, di); B_t, C_t (B, N)."""
+    A = -jnp.exp(p["A_log"])                              # (di, N)
+    dA = jnp.exp(dt_t[..., None] * A[None])               # (B, di, N)
+    dBx = dt_t[..., None] * x_t[..., None] * B_t[:, None, :]
+    h = h * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t)
+    return h, y
+
+
+def _pre(p, x):
+    """Shared projections: x (B, S, d_model) -> (xc, z, dt, Bm, Cm)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x1, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di)
+    return x1, z
+
+
+def _conv_scan_inputs(p, x1):
+    B, S, di = x1.shape
+    K = p["conv_w"].shape[0]
+    xp = jnp.pad(x1, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(
+        xp[:, i : i + S, :] * p["conv_w"][i][None, None, :] for i in range(K)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x1.dtype)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dr->bsr", xc, p["w_dt1"]) @ p["w_dt2"]
+        + p["dt_bias"]
+    ).astype(jnp.float32)                                  # (B, S, di)
+    Bm = jnp.einsum("bsd,dn->bsn", xc, p["w_B"]).astype(jnp.float32)
+    Cm = jnp.einsum("bsd,dn->bsn", xc, p["w_C"]).astype(jnp.float32)
+    return xc, dt, Bm, Cm
+
+
+def mamba_seq(p, x: jnp.ndarray, chunk: int = 32) -> jnp.ndarray:
+    """Training/prefill path. x (B, S, d_model) -> (B, S, d_model).
+
+    Dispatches to the chunked form (§Perf iteration 5) for S > 1."""
+    if chunk and x.shape[1] > 1:
+        return mamba_seq_chunked(p, x, chunk=chunk)
+    return mamba_seq_recurrent(p, x)
+
+
+def mamba_seq_recurrent(p, x: jnp.ndarray) -> jnp.ndarray:
+    """Reference per-step recurrence (the tests' oracle for the chunked form)."""
+    B, S, _ = x.shape
+    N = p["w_B"].shape[1]
+    di = p["D"].shape[0]
+    x1, z = _pre(p, x)
+    xc, dt, Bm, Cm = _conv_scan_inputs(p, x1)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        h, y = _cell(p, h, x_t.astype(jnp.float32), dt_t, B_t, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    xs = (
+        xc.transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+        Bm.transpose(1, 0, 2),
+        Cm.transpose(1, 0, 2),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)                     # ys (S, B, di)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    y = y + p["D"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+def mamba_seq_chunked(p, x: jnp.ndarray, chunk: int = 32) -> jnp.ndarray:
+    """Chunked selective scan (§Perf iteration 5): the diagonal recurrence
+        h_t = a_t (.) h_{t-1} + b_t,   a_t = exp(dt_t A),  b_t = dt_t x_t B_t
+    unrolls within a chunk of c steps via log-space cumulative decays:
+        h_t = exp(L_t) (.) [h_0 + cumsum_{s<=t} exp(-L_s) (.) b_s],
+        y_t = <C_t, h_t>_N
+    so the (B, di, N) state round-trips HBM once per CHUNK; the within-chunk
+    cumsum runs over a (B, c, di, N) tile (the VMEM-resident working set of a
+    fused TPU kernel).  Identical math — allclose vs the recurrence in
+    tests/test_models.py."""
+    Bsz, S, _ = x.shape
+    N = p["w_B"].shape[1]
+    di = p["D"].shape[0]
+    x1, z = _pre(p, x)
+    xc, dt, Bm, Cm = _conv_scan_inputs(p, x1)
+
+    pad = (-S) % chunk
+    c = chunk
+    nc = (S + pad) // c
+
+    def fold(a, fill=0.0):
+        if pad:
+            a = jnp.pad(
+                a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                constant_values=fill,
+            )
+        return a.reshape(Bsz, nc, c, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    xcf = fold(xc.astype(jnp.float32))
+    dtf = fold(dt)                                          # (nc, B, c, di)
+    Bf = fold(Bm)                                           # (nc, B, c, N)
+    Cf = fold(Cm)
+    A = -jnp.exp(p["A_log"])                                # (di, N)
+    CL = 30.0
+
+    def per_chunk(h0, inp):
+        xck, dtk, Bk, Ck = inp                              # (B, c, ...)
+        # log decays: L_t = sum_{s<=t} dt_s A   (all negative)
+        la = dtk[..., None] * A[None, None]                 # (B, c, di, N)
+        L = jnp.cumsum(la, axis=1)
+        b = dtk[..., None] * xck[..., None] * Bk[:, :, None, :]  # (B, c, di, N)
+        inner = jnp.cumsum(jnp.exp(jnp.clip(-L, -CL, CL)) * b, axis=1)
+        h = jnp.exp(jnp.clip(L, -CL, CL)) * (h0[:, None] + inner)  # (B, c, di, N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, Ck)              # (B, c, di)
+        h_end = h[:, -1]
+        return h_end, y
+
+    h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+    _, ys = jax.lax.scan(per_chunk, h0, (xcf, dtf, Bf, Cf))  # (nc, B, c, di)
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, S + pad, di)[:, :S]
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+def mamba_decode(p, state, x):
+    """One-token path. state = (conv_buf (B, K-1, di), h (B, di, N)); x (B, d)."""
+    conv_buf, h = state
+    K = p["conv_w"].shape[0]
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)                      # (B, di)
+    window = jnp.concatenate([conv_buf, x1[:, None, :]], axis=1)  # (B, K, di)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt = jax.nn.softplus(
+        (xc @ p["w_dt1"]) @ p["w_dt2"] + p["dt_bias"]
+    ).astype(jnp.float32)
+    B_t = (xc @ p["w_B"]).astype(jnp.float32)
+    C_t = (xc @ p["w_C"]).astype(jnp.float32)
+    h, y = _cell(p, h, xc.astype(jnp.float32), dt, B_t, C_t)
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return (window[:, 1:], h), out
+
+
+def init_mamba_state(batch: int, d_inner: int, N: int, K: int, dtype):
+    return (
+        jnp.zeros((batch, K - 1, d_inner), dtype),
+        jnp.zeros((batch, d_inner, N), jnp.float32),
+    )

@@ -1,0 +1,292 @@
+"""The stacked model: init / train forward / prefill / decode for all families.
+
+Layer stacking: layers are grouped into identical-spec groups of size
+lcm(kind-pattern, window-pattern, moe-period); groups are scanned with
+`jax.lax.scan` over stacked parameters (compact HLO — essential for lowering
+52-61-layer configs for a 512-device mesh), with `jax.checkpoint` (remat)
+around each group body for training.  Layers that don't fit the periodic
+pattern (gemma3's 26 = 4*6+2, kimi's leading dense layer) run unrolled as a
+prefix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import reduce
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    prefix_specs: tuple[B.LayerSpec, ...]   # unrolled leading layers
+    group_specs: tuple[B.LayerSpec, ...]    # slots of one scanned group
+    n_groups: int
+    # encoder (whisper): uniform non-causal attention layers, all scanned
+    n_enc_groups: int = 0
+    enc_group_specs: tuple[B.LayerSpec, ...] = ()
+
+
+def _lcm(*xs: int) -> int:
+    return reduce(math.lcm, [x for x in xs if x > 0], 1)
+
+
+def build(cfg: ModelConfig) -> Model:
+    group = _lcm(len(cfg.kind_pattern), len(cfg.window_pattern), cfg.moe_period)
+    body = cfg.n_layers - cfg.first_dense
+    group = min(group, max(1, body))
+    rem = body % group
+    prefix_len = cfg.first_dense + rem
+    n_groups = (cfg.n_layers - prefix_len) // group
+
+    prefix_specs = tuple(B.LayerSpec.of(cfg, i) for i in range(prefix_len))
+    group_specs = tuple(
+        B.LayerSpec.of(cfg, prefix_len + s) for s in range(group)
+    )
+    enc_specs = ()
+    n_enc_groups = 0
+    if cfg.n_encoder_layers:
+        enc_specs = (
+            B.LayerSpec(kind="attn", window=0, is_moe=False, cross=False, causal=False),
+        )
+        n_enc_groups = cfg.n_encoder_layers
+    return Model(
+        cfg=cfg,
+        prefix_specs=prefix_specs,
+        group_specs=group_specs,
+        n_groups=n_groups,
+        n_enc_groups=n_enc_groups,
+        enc_group_specs=enc_specs,
+    )
+
+
+# ----------------------------------------------------------------------- init
+
+
+def _init_group(key, cfg, specs):
+    ks = jax.random.split(key, len(specs))
+    return tuple(B.init_layer(k, cfg, s) for k, s in zip(ks, specs))
+
+
+def init_params(model: Model, key) -> dict:
+    cfg = model.cfg
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    k_embed, k_unembed, k_pre, k_groups, k_enc = jax.random.split(key, 5)
+    params: dict = {
+        "embed": L.init_linear(k_embed, (cfg.vocab_size, cfg.d_model), scale=0.02, dtype=dt),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_linear(
+            k_unembed, (cfg.d_model, cfg.vocab_size), dtype=dt
+        )
+    if model.prefix_specs:
+        ks = jax.random.split(k_pre, len(model.prefix_specs))
+        params["prefix"] = tuple(
+            B.init_layer(k, cfg, s) for k, s in zip(ks, model.prefix_specs)
+        )
+    if model.n_groups:
+        ks = jax.random.split(k_groups, model.n_groups)
+        stacked = [_init_group(k, cfg, model.group_specs) for k in ks]
+        params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+    if model.n_enc_groups:
+        ke1, ke2 = jax.random.split(k_enc)
+        ks = jax.random.split(ke1, model.n_enc_groups)
+        stacked = [_init_group(k, cfg, model.enc_group_specs) for k in ks]
+        params["encoder"] = {
+            "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *stacked),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def params_specs(model: Model) -> dict:
+    """ShapeDtypeStructs of every parameter (dry-run: no allocation)."""
+    return jax.eval_shape(lambda k: init_params(model, k), jax.random.key(0))
+
+
+# ------------------------------------------------------------------- forward
+
+
+def _unembed(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def _run_groups_seq(model, gparams, specs, x, positions, enc_states, want_cache, remat):
+    cfg = model.cfg
+
+    def body(carry, gp):
+        x, aux = carry
+        caches = []
+        for s, spec in enumerate(specs):
+            x, cache, a = B.layer_seq(
+                gp[s], x, cfg, spec, positions, enc_states, want_cache
+            )
+            aux = aux + a
+            caches.append(cache if cache is not None else 0)
+        return (x, aux), tuple(caches) if want_cache else 0
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.float32(0.0)), gparams)
+    return x, aux, caches
+
+
+def _embed_inputs(model: Model, params, batch):
+    """Returns (x (B, S, d), positions (B, S), labels-or-None, enc_states)."""
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    x = L.embed(tokens, params["embed"])
+    Btok, S = tokens.shape
+
+    enc_states = None
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(x.dtype)       # (B, T_img, d) stub
+        x = jnp.concatenate([patches, x], axis=1)
+        S = x.shape[1]
+    if cfg.n_encoder_layers:
+        frames = batch["frames"].astype(x.dtype)         # (B, T_enc, d) stub
+        positions_enc = jnp.broadcast_to(
+            jnp.arange(frames.shape[1]), frames.shape[:2]
+        )
+        h, _, _ = _run_groups_seq(
+            model, params["encoder"]["groups"], model.enc_group_specs,
+            frames, positions_enc, None, want_cache=False, remat=True,
+        )
+        enc_states = L.rmsnorm(h, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    positions = jnp.broadcast_to(jnp.arange(S), (Btok, S))
+    from repro.models import sharding as Sh
+    return Sh.constrain_act(x), positions, enc_states
+
+
+def forward_train(model: Model, params, batch, ce_chunk: int = 512):
+    """Returns scalar loss (CE + 0.01 * MoE aux)."""
+    cfg = model.cfg
+    x, positions, enc_states = _embed_inputs(model, params, batch)
+    aux_total = jnp.float32(0.0)
+
+    for i, spec in enumerate(model.prefix_specs):
+        x, _, a = B.layer_seq(params["prefix"][i], x, cfg, spec, positions, enc_states)
+        aux_total += a
+    if model.n_groups:
+        x, aux, _ = _run_groups_seq(
+            model, params["groups"], model.group_specs, x, positions, enc_states,
+            want_cache=False, remat=True,
+        )
+        aux_total += aux
+
+    h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        # image positions carry no next-token loss
+        pad = h.shape[1] - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=-100)
+    loss = L.chunked_ce_loss(h, labels, _unembed(params, cfg), chunk=ce_chunk)
+    return loss + 0.01 * aux_total
+
+
+def prefill(model: Model, params, batch):
+    """Forward over the full prompt; returns (last_logits (B, V), caches)."""
+    cfg = model.cfg
+    x, positions, enc_states = _embed_inputs(model, params, batch)
+
+    prefix_caches = []
+    for i, spec in enumerate(model.prefix_specs):
+        x, cache, _ = B.layer_seq(
+            params["prefix"][i], x, cfg, spec, positions, enc_states, want_cache=True
+        )
+        prefix_caches.append(cache)
+    group_caches = 0
+    if model.n_groups:
+        x, _, group_caches = _run_groups_seq(
+            model, params["groups"], model.group_specs, x, positions, enc_states,
+            want_cache=True, remat=False,
+        )
+    h = L.rmsnorm(x[:, -1, :], params["final_norm"], cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ _unembed(params, cfg).astype(jnp.float32)
+    caches = {"prefix": tuple(prefix_caches), "groups": group_caches}
+    return logits, caches
+
+
+def decode_step(model: Model, params, caches, tokens, pos):
+    """One decode step. tokens (B,) int32; pos scalar int32 (write index).
+    Returns (logits (B, V), new caches)."""
+    cfg = model.cfg
+    x = L.embed(tokens, params["embed"])
+
+    new_prefix = []
+    for i, spec in enumerate(model.prefix_specs):
+        x, c, _ = B.layer_decode(params["prefix"][i], x, cfg, spec, caches["prefix"][i], pos)
+        new_prefix.append(c)
+
+    new_groups = caches["groups"]
+    if model.n_groups:
+        specs = model.group_specs
+
+        def body(carry, inp):
+            x = carry
+            gp, gc = inp
+            new_c = []
+            for s, spec in enumerate(specs):
+                x, c, _ = B.layer_decode(gp[s], x, cfg, spec, gc[s], pos)
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        x, new_groups = jax.lax.scan(body, x, (params["groups"], caches["groups"]))
+
+    h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ _unembed(params, cfg).astype(jnp.float32)
+    return logits, {"prefix": tuple(new_prefix), "groups": new_groups}
+
+
+# -------------------------------------------------------------- cache specs
+
+
+def init_decode_caches(model: Model, batch_size: int, cache_len: int, enc_len: int = 0):
+    """Zero-initialized caches for decode-only lowering (dry-run decode shapes)."""
+    cfg = model.cfg
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def one(spec: B.LayerSpec):
+        if spec.kind == "attn":
+            klen = cache_len if spec.window == 0 else min(cache_len, spec.window + 1)
+            c = {
+                "k": jnp.zeros((batch_size, cfg.n_kv_heads, klen, cfg.d_head), dt),
+                "v": jnp.zeros((batch_size, cfg.n_kv_heads, klen, cfg.d_head), dt),
+            }
+            if spec.cross:
+                c["ck"] = jnp.zeros((batch_size, cfg.n_kv_heads, enc_len, cfg.d_head), dt)
+                c["cv"] = jnp.zeros((batch_size, cfg.n_kv_heads, enc_len, cfg.d_head), dt)
+            return c
+        if spec.kind == "mamba":
+            return {
+                "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1, cfg.d_inner), dt),
+                "ssm": jnp.zeros((batch_size, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            }
+        if spec.kind == "rwkv":
+            dh = cfg.d_model // cfg.n_heads
+            return {
+                "tshift": jnp.zeros((batch_size, cfg.d_model), jnp.float32),
+                "wkv": jnp.zeros((batch_size, cfg.n_heads, dh, dh), jnp.float32),
+                "cshift": jnp.zeros((batch_size, cfg.d_model), jnp.float32),
+            }
+        raise ValueError(spec.kind)
+
+    prefix = tuple(one(s) for s in model.prefix_specs)
+    groups = 0
+    if model.n_groups:
+        per_group = tuple(one(s) for s in model.group_specs)
+        groups = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (model.n_groups,) + x.shape), per_group
+        )
+    return {"prefix": prefix, "groups": groups}

@@ -1,0 +1,254 @@
+"""RWKV-6 "Finch" block [arXiv:2404.05892]: attention-free time mix with
+data-dependent decay (the low-rank 'lora' on w is the Finch signature),
+plus the squared-ReLU channel mix.
+
+Sequence path: lax.scan over time with per-head state (B, H, dk, dv).
+Decode: one cell step on carried (shift, state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_rwkv(key, d_model: int, d_ff: int, n_heads: int, dtype):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix interpolation factors (token shift)
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d_model,), 0.5, jnp.float32),
+        "w_r": L.init_linear(ks[0], (d_model, d_model), dtype=dtype),
+        "w_k": L.init_linear(ks[1], (d_model, d_model), dtype=dtype),
+        "w_v": L.init_linear(ks[2], (d_model, d_model), dtype=dtype),
+        "w_g": L.init_linear(ks[3], (d_model, d_model), dtype=dtype),
+        "w_o": L.init_linear(ks[4], (d_model, d_model), dtype=dtype),
+        # data-dependent decay: w = exp(-exp(base + lora(x)))
+        "w_decay_base": jnp.full((d_model,), -2.0, jnp.float32),
+        "w_decay_a": L.init_linear(ks[5], (d_model, 64), dtype=dtype),
+        "w_decay_b": L.init_linear(ks[6], (64, d_model), scale=64**-0.5, dtype=dtype),
+        "u_bonus": jnp.zeros((n_heads, dh), jnp.float32),
+        "ln_x": jnp.ones((d_model,), jnp.float32),
+        # channel mix
+        "mu_cr": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_ck": jnp.full((d_model,), 0.5, jnp.float32),
+        "cm_r": L.init_linear(ks[7], (d_model, d_model), dtype=dtype),
+        "cm_k": L.init_linear(ks[8], (d_model, d_ff), dtype=dtype),
+        "cm_v": L.init_linear(ks[9], (d_ff, d_model), scale=d_ff**-0.5, dtype=dtype),
+    }
+
+
+def _shift(x: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: x_{t-1} (zeros at t=0). x (B, S, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _mix(x, prev, mu):
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def _heads(x, H):
+    B, S, D = x.shape
+    return x.reshape(B, S, H, D // H)
+
+
+def _projections(p, x):
+    prev = _shift(x)
+    r = jnp.einsum("bsd,de->bse", _mix(x, prev, p["mu_r"]), p["w_r"])
+    k = jnp.einsum("bsd,de->bse", _mix(x, prev, p["mu_k"]), p["w_k"])
+    v = jnp.einsum("bsd,de->bse", _mix(x, prev, p["mu_v"]), p["w_v"])
+    g = jnp.einsum("bsd,de->bse", _mix(x, prev, p["mu_g"]), p["w_g"])
+    xw = _mix(x, prev, p["mu_w"])
+    decay = p["w_decay_base"] + jnp.einsum(
+        "bsd,dr->bsr", xw, p["w_decay_a"]
+    ).astype(jnp.float32) @ p["w_decay_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay))                           # (B, S, D) in (0,1)
+    return r, k, v, g, w
+
+
+def _finish(p, y, g, x_dtype, B, S, D):
+    y = L.rmsnorm(y.astype(x_dtype), p["ln_x"])
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x_dtype)
+    return jnp.einsum("bsd,de->bse", y, p["w_o"])
+
+
+def time_mix_seq(p, x: jnp.ndarray, n_heads: int, chunk: int = 64) -> jnp.ndarray:
+    """x (B, S, D) -> (B, S, D).  Dispatches to the chunked form."""
+    if chunk and x.shape[1] > 1:
+        return time_mix_seq_chunked(p, x, n_heads, chunk=chunk)
+    return time_mix_seq_recurrent(p, x, n_heads)
+
+
+def time_mix_seq_recurrent(p, x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """Reference per-step recurrence (the tests' oracle for the chunked form).
+
+    Memory behaviour: every step round-trips the (B, H, dh, dh) state through
+    HBM and saves per-step residuals for backward — measured 1228 TiB/device
+    on rwkv6-7b train_4k (§Perf iteration 3 baseline)."""
+    B, S, D = x.shape
+    H = n_heads
+    dh = D // H
+    r, k, v, g, w = _projections(p, x)
+
+    rh = _heads(r, H).astype(jnp.float32)
+    kh = _heads(k, H).astype(jnp.float32)
+    vh = _heads(v, H).astype(jnp.float32)
+    wh = _heads(w.astype(x.dtype), H).astype(jnp.float32)
+    u = p["u_bonus"][None]                                  # (1, H, dh)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                           # (B, H, dh) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., None] * kv)
+        state = state * w_t[..., None] + kv
+        return state, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rh, kh, vh, wh))
+    s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)                      # (S, B, H, dh)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D)
+    return _finish(p, y, g, x.dtype, B, S, D)
+
+
+def time_mix_seq_chunked(p, x: jnp.ndarray, n_heads: int, chunk: int = 64) -> jnp.ndarray:
+    """Chunked-parallel WKV6 (§Perf iteration 3): the recurrence is unrolled
+    WITHIN chunks of c steps into dense (c x c) matmul form — the standard
+    chunked-linear-attention factorization (GLA/RWKV kernels):
+
+        S_{t-1} = diag(a_{t-1}) S_0 + sum_{s<t} diag(a_{t-1}/a_s) k_s^T v_s
+        y_t     = r_t S_{t-1} + (r_t . u (x) k_t) v_t
+                = rt~ S_0 + [tril_strict(rt~ Kt~^T)] V + diag-term
+        with a_t = cumprod(w), rt~ = r_t (.) a_{t-1}, kt~ = k_s (.) a_s^{-1}
+
+    State round-trips HBM once per CHUNK instead of once per step, and
+    backward saves per-chunk residuals: c-fold less sequential traffic at the
+    cost of the (c x c) intra-chunk matmuls — memory-bound -> MXU-bound.
+    Cumulative decays are computed in log space with a +-30 clamp (exact vs
+    the recurrence at realistic decay rates; tests/test_models.py asserts
+    allclose against the recurrent oracle)."""
+    B, S, D = x.shape
+    H = n_heads
+    dh = D // H
+    r, k, v, g, w = _projections(p, x)
+
+    pad = (-S) % chunk
+    def pad_heads(a, fill=0.0):
+        a = _heads(a, H).astype(jnp.float32)               # (B, S, H, dh)
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=fill)
+        return a.transpose(0, 2, 1, 3)                     # (B, H, Sp, dh)
+
+    rh, kh, vh = pad_heads(r), pad_heads(k), pad_heads(v)
+    wh = pad_heads(w.astype(x.dtype), fill=1.0)
+    nc = (S + pad) // chunk
+    c = chunk
+
+    def fold(a):  # (B, H, Sp, dh) -> (nc, B, H, c, dh)
+        return a.reshape(B, H, nc, c, dh).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc, wc = fold(rh), fold(kh), fold(vh), fold(wh)
+    u = p["u_bonus"][None]                                  # (1, H, dh)
+    CL = 30.0  # log-space clamp
+
+    def per_chunk(S0, inp):
+        rt, kt, vt, wt = inp                               # (B, H, c, dh)
+        logw = jnp.log(jnp.maximum(wt, 1e-38))
+        Lw = jnp.cumsum(logw, axis=2)                      # inclusive cumsum
+        L_excl = Lw - logw                                 # a_{t-1}
+        a_excl = jnp.exp(jnp.clip(L_excl, -CL, CL))
+        inv_a = jnp.exp(jnp.clip(-Lw, -CL, CL))
+        r_t = rt * a_excl
+        k_t = kt * inv_a
+
+        scores = jnp.einsum("bhtd,bhsd->bhts", r_t, k_t)   # (B, H, c, c)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        y_intra = jnp.einsum(
+            "bhts,bhsv->bhtv", jnp.where(mask[None, None], scores, 0.0), vt
+        )
+        y_state = jnp.einsum("bhtd,bhdv->bhtv", r_t, S0)
+        y_diag = jnp.sum(rt * u[..., None, :] * kt, axis=-1, keepdims=True) * vt
+        y = y_intra + y_state + y_diag                     # (B, H, c, dh)
+
+        a_end = jnp.exp(jnp.clip(Lw[:, :, -1:, :], -CL, CL))  # (B, H, 1, dh)
+        decay_to_end = jnp.exp(jnp.clip(Lw[:, :, -1:, :] - Lw, -CL, CL))
+        S_new = a_end[:, :, 0, :, None] * S0 + jnp.einsum(
+            "bhsd,bhsv->bhdv", kt * decay_to_end, vt
+        )
+        return S_new, y
+
+    s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    _, ys = jax.lax.scan(per_chunk, s0, (rc, kc, vc, wc))   # (nc, B, H, c, dh)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S + pad, dh)
+    y = y[:, :, :S].transpose(0, 2, 1, 3).reshape(B, S, D)
+    return _finish(p, y, g, x.dtype, B, S, D)
+
+
+def channel_mix_seq(p, x: jnp.ndarray) -> jnp.ndarray:
+    prev = _shift(x)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", _mix(x, prev, p["mu_cr"]), p["cm_r"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", _mix(x, prev, p["mu_ck"]), p["cm_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    return r * jnp.einsum("bsf,fd->bsd", k, p["cm_v"])
+
+
+# --------------------------------------------------------------------- decode
+
+
+def init_rwkv_state(batch: int, d_model: int, n_heads: int):
+    dh = d_model // n_heads
+    return (
+        jnp.zeros((batch, d_model), jnp.float32),            # time-mix shift
+        jnp.zeros((batch, n_heads, dh, dh), jnp.float32),    # wkv state
+        jnp.zeros((batch, d_model), jnp.float32),            # channel-mix shift
+    )
+
+
+def time_mix_decode(p, tshift, wkv, x, n_heads: int):
+    """One-token time mix. tshift (B, D) f32, wkv (B, H, dh, dh) f32, x (B, D).
+    Returns (new_tshift, new_wkv, out)."""
+    B, D = x.shape
+    H = n_heads
+    dh = D // H
+    prev = tshift.astype(x.dtype)
+
+    def mix(mu):
+        return x + (prev - x) * mu.astype(x.dtype)
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(B, H, dh).astype(jnp.float32)
+    g = mix(p["mu_g"]) @ p["w_g"]
+    decay = p["w_decay_base"] + (
+        mix(p["mu_w"]) @ p["w_decay_a"]
+    ).astype(jnp.float32) @ p["w_decay_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(B, H, dh)
+    u = p["u_bonus"][None]
+
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, wkv + u[..., None] * kv)
+    wkv = wkv * w[..., None] + kv
+    y = y.reshape(B, D)
+    y = L.rmsnorm(y.astype(x.dtype), p["ln_x"])
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return x.astype(jnp.float32), wkv, y @ p["w_o"]
+
+
+def channel_mix_decode(p, cshift, x):
+    """One-token channel mix. cshift (B, D) f32, x (B, D).
+    Returns (new_cshift, out)."""
+    prev = cshift.astype(x.dtype)
+    rc = jax.nn.sigmoid(
+        ((x + (prev - x) * p["mu_cr"].astype(x.dtype)) @ p["cm_r"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    kc = (x + (prev - x) * p["mu_ck"].astype(x.dtype)) @ p["cm_k"]
+    kc = jnp.square(jax.nn.relu(kc.astype(jnp.float32))).astype(x.dtype)
+    return x.astype(jnp.float32), rc * (kc @ p["cm_v"])

@@ -1,0 +1,207 @@
+"""Partition specs: parameters, activations, KV caches, optimizer state.
+
+Strategy (DESIGN.md §5):
+  * TP over 'model'  — attention heads / FFN columns / vocab / experts (EP)
+  * FSDP over 'data' — the non-TP dimension of every large weight is sharded
+    over the data axis (ZeRO-3: XLA all-gathers at use, reduce-scatters grads)
+  * DP over 'pod' x 'data' — the batch axis
+Params are replicated across 'pod' (cross-pod traffic = gradient all-reduce
+only, the DCN-friendly choice); optimizer state mirrors the param specs.
+
+`set_active_mesh` lets model code place with_sharding_constraint hints only
+when lowering under a mesh (smoke tests run unconstrained on one device).
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_ACTIVE = {"mesh": None, "dp": ("data",), "tp": "model"}
+
+
+def set_active_mesh(mesh, dp_axes=("data",), tp_axis="model"):
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["dp"] = tuple(dp_axes)
+    _ACTIVE["tp"] = tp_axis
+
+
+def clear_active_mesh():
+    _ACTIVE["mesh"] = None
+
+
+def constrain(x, *spec):
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_act(x):
+    """Pin the residual stream to the Megatron activation layout: batch over
+    the DP axes, features replicated.  Without this anchor GSPMD's propagation
+    at large model-axis sizes drifts into replicated-batch schedules (measured
+    3.6-8.3x FLOPs on 16x16 — see EXPERIMENTS.md §Perf iteration 0)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    if x.ndim == 3:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(_ACTIVE["dp"], None, None))
+        )
+    if x.ndim == 2:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(_ACTIVE["dp"], None))
+        )
+    return x
+
+
+def dp_axes():
+    return _ACTIVE["dp"]
+
+
+def constrain_ep_weight(w):
+    """Replicate an expert weight's non-E dims at USE (experts stay on
+    'model').  Forces GSPMD to all-gather the FSDP-sharded weight — a
+    loop-invariant transfer the scheduler hoists — instead of all-reducing
+    the loop-variant (E, C, F) partial sums (measured 525 GiB/device of f32
+    all-reduce on dbrx train_4k before this; §Perf iteration 2)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None or w.ndim != 3:
+        return w
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec_e = "model" if w.shape[0] % sizes.get("model", 1) == 0 else None
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(mesh, P(spec_e, None, None))
+    )
+
+
+def constrain_moe_buf(buf):
+    """EP layout for the dispatch buffer (E, C, d): experts over 'model',
+    capacity over the DP axes — keeps the expert einsum local per expert
+    shard and lets XLA route the scatter as an all-to-all instead of
+    all-reducing a replicated buffer (§Perf iteration 2)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return buf
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = _ACTIVE["dp"]
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes.get(a, 1)
+    spec_c = dp if buf.shape[1] % max(dp_size, 1) == 0 else None
+    spec_e = "model" if buf.shape[0] % sizes.get("model", 1) == 0 else None
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(mesh, P(spec_e, spec_c, None))
+    )
+
+
+# -------------------------------------------------------------- param rules
+
+# matched against the JOINED key path (e.g. "groups/3/attn/wq"); first match
+# wins.  Specs are written for the UNSTACKED shape; a leading None is
+# prepended automatically for scan-stacked ("groups/...") leaves.
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",            ("model", "data")),   # (V, D)
+    (r"unembed$",          ("data", "model")),   # (D, V)
+    (r"(attn|cross)/wq$",  ("data", "model")),
+    (r"(attn|cross)/wk$",  ("data", "model")),
+    (r"(attn|cross)/wv$",  ("data", "model")),
+    (r"(attn|cross)/wo$",  ("model", "data")),
+    (r"ffn/w_gate$",       ("data", "model")),
+    (r"ffn/w_up$",         ("data", "model")),
+    (r"ffn/w_down$",       ("model", "data")),
+    (r"moe/router$",       ("data", None)),
+    (r"moe/w_gate$",       ("model", "data", None)),   # (E, D, F): EP + FSDP
+    (r"moe/w_up$",         ("model", "data", None)),
+    (r"moe/w_down$",       ("model", None, "data")),
+    (r"shared/w_gate$",    ("data", "model")),
+    (r"shared/w_up$",      ("data", "model")),
+    (r"shared/w_down$",    ("model", "data")),
+    (r"mamba/in_proj$",    ("data", "model")),
+    (r"mamba/conv_w$",     (None, "model")),
+    (r"mamba/conv_b$",     ("model",)),
+    (r"mamba/w_dt1$",      ("model", None)),
+    (r"mamba/w_dt2$",      (None, "model")),
+    (r"mamba/dt_bias$",    ("model",)),
+    (r"mamba/w_B$",        ("model", None)),
+    (r"mamba/w_C$",        ("model", None)),
+    (r"mamba/A_log$",      ("model", None)),
+    (r"mamba/D$",          ("model",)),
+    (r"mamba/out_proj$",   ("model", "data")),
+    (r"rwkv/w_o$",         ("model", "data")),
+    (r"rwkv/w_[rkvg]$",    ("data", "model")),
+    (r"rwkv/w_decay_a$",   ("data", None)),
+    (r"rwkv/w_decay_b$",   (None, "model")),
+    (r"rwkv/u_bonus$",     ("model", None)),
+    (r"rwkv/cm_r$",        ("data", "model")),
+    (r"rwkv/cm_k$",        ("data", "model")),
+    (r"rwkv/cm_v$",        ("model", "data")),
+    (r"rwkv/(mu_|ln_x|w_decay_base)", (None,)),
+    (r"norm",              (None,)),
+    (r".*",                (None,)),             # fallback: replicate
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def _spec_for(path_str: str, ndim: int) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            spec = tuple(spec)
+            stacked = path_str.startswith("groups") or "/groups" in path_str
+            if stacked:
+                spec = (None,) + spec
+            # pad/trim to ndim
+            spec = spec[:ndim] + (None,) * max(0, ndim - len(spec))
+            # divisibility guard happens at lowering; GSPMD requires divisible
+            return P(*spec)
+    return P()
+
+
+def param_pspecs(params_shape) -> dict:
+    """PartitionSpec pytree matching an eval_shape'd param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_str(path), len(leaf.shape)),
+        params_shape,
+    )
+
+
+def check_divisible(params_shape, pspecs, mesh) -> list[str]:
+    """Returns a list of leaves whose sharded dims don't divide — these fall
+    back to replication (GSPMD would otherwise fail)."""
+    bad = []
+
+    def fix(path, leaf, spec):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if leaf.shape[dim] % total:
+                bad.append(_path_str(path))
+                return P()
+        return spec
+
+    fixed = jax.tree_util.tree_map_with_path(fix, params_shape, pspecs)
+    return fixed, bad
+
+
+def named(mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

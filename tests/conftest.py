@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device;
+only launch/dryrun.py (and subprocesses spawned by distributed tests) set the
+512-device flag."""
+
+import numpy as np
+import pytest
+
+from repro.core import dataset as dataset_mod
+from repro.core import vamana as vamana_mod
+from repro.core.quant import RabitQuantizer
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    return dataset_mod.make_dataset(n=1500, d=64, n_queries=60, k=10, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_graph(small_ds):
+    return vamana_mod.build_vamana(
+        small_ds.base, R=20, L=40, batch_size=256, seed=0
+    )
+
+
+@pytest.fixture(scope="session")
+def small_qb(small_ds):
+    return RabitQuantizer(small_ds.dim, seed=0).fit_encode(small_ds.base)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,136 @@
+"""Engine semantics: async == sync results; accounting sanity (paper §3.1)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.dataset import recall_at_k
+from repro.core.sim import SSD, SSDConfig
+
+
+def _ids(results, k=10):
+    out = np.full((len(results), k), -1, dtype=np.int64)
+    for i, r in enumerate(results):
+        m = min(k, len(r.ids))
+        out[i, :m] = r.ids[:m]
+    return out
+
+
+@pytest.fixture(scope="module")
+def systems(small_ds, small_graph, small_qb):
+    return small_ds, small_graph, small_qb
+
+
+def test_async_equals_sync_results(systems):
+    """A cache-OBLIVIOUS algorithm under B=1 and B=8 must return identical
+    neighbors — execution overlap must never change its output.  (The
+    cache-AWARE search is excluded by design: Alg. 2's pivot depends on pool
+    state, which depends on query interleaving; its recall parity is checked
+    separately below.)"""
+    ds, g, qb = systems
+    outs = {}
+    for B in (1, 8):
+        cfg = baselines.SystemConfig(
+            batch_size=B, buffer_ratio=0.2,
+            params=baselines.SearchParams(L=48, W=4, cbs=False, prefetch=False),
+        )
+        sys_ = baselines.build_system("+record", ds.base, g, qb, cfg)
+        results, _ = sys_.run(ds.queries[:40])
+        outs[B] = _ids(results)
+    np.testing.assert_array_equal(outs[1], outs[8])
+
+
+def test_cache_aware_async_recall_parity(systems):
+    """Alg. 2 results may differ between B=1 and B=8 (pivoting is
+    cache-state-dependent) but recall must be equivalent."""
+    ds, g, qb = systems
+    recalls = {}
+    for B in (1, 8):
+        cfg = baselines.SystemConfig(batch_size=B, buffer_ratio=0.2)
+        sys_ = baselines.build_system("velo", ds.base, g, qb, cfg)
+        results, _ = sys_.run(ds.queries)
+        recalls[B] = recall_at_k(_ids(results), ds.groundtruth, 10)
+    assert abs(recalls[1] - recalls[8]) < 0.05, recalls
+
+
+def test_async_improves_throughput(systems):
+    ds, g, qb = systems
+    qps = {}
+    for B in (1, 8):
+        cfg = baselines.SystemConfig(batch_size=B, buffer_ratio=0.1)
+        sys_ = baselines.build_system("velo", ds.base, g, qb, cfg)
+        _, stats = sys_.run(ds.queries)
+        qps[B] = stats.qps
+    assert qps[8] > 1.5 * qps[1], f"async must overlap I/O: {qps}"
+
+
+def test_multi_worker_scales(systems):
+    ds, g, qb = systems
+    qps = {}
+    for w in (1, 4):
+        cfg = baselines.SystemConfig(n_workers=w, batch_size=4, buffer_ratio=0.2)
+        sys_ = baselines.build_system("velo", ds.base, g, qb, cfg)
+        _, stats = sys_.run(ds.queries)
+        qps[w] = stats.qps
+    assert qps[4] > 2.0 * qps[1]
+
+
+def test_io_dedup_under_prefetch(systems):
+    """Prefetch + demand read of the same page must cost one I/O."""
+    ds, g, qb = systems
+    cfg = baselines.SystemConfig(batch_size=4, buffer_ratio=0.15)
+    sys_ = baselines.build_system("velo", ds.base, g, qb, cfg)
+    _, stats = sys_.run(ds.queries)
+    # every charged I/O is one page; with dedup, total I/O <= sum of per-query
+    # demand reads + prefetches without double count. Loose sanity bound:
+    assert stats.io_count < 3 * stats.n_queries * sys_.config.params.L
+
+
+def test_slower_ssd_hurts_sync_more_than_async(systems):
+    ds, g, qb = systems
+    ratios = {}
+    for B, name in ((1, "sync"), (8, "async")):
+        cfg = baselines.SystemConfig(batch_size=B, buffer_ratio=0.1)
+        sys_ = baselines.build_system("velo", ds.base, g, qb, cfg)
+        _, fast = sys_.run(ds.queries, SSDConfig(read_latency_s=40e-6))
+        sys2 = baselines.build_system("velo", ds.base, g, qb, cfg)
+        _, slow = sys2.run(ds.queries, SSDConfig(read_latency_s=400e-6))
+        ratios[name] = fast.qps / slow.qps
+    assert ratios["sync"] > ratios["async"], (
+        "async must hide I/O latency better than sync"
+    )
+
+
+def test_recall_all_systems(systems):
+    """Every compared system must answer with reasonable recall on the same graph."""
+    ds, g, qb = systems
+    floor = {"velo": 0.60, "diskann": 0.75, "starling": 0.75, "pipeann": 0.75,
+             "inmemory": 0.75}
+    for name, lo in floor.items():
+        cfg = baselines.SystemConfig(buffer_ratio=0.2, batch_size=4)
+        sys_ = baselines.build_system(name, ds.base, g, qb, cfg)
+        results, _ = sys_.run(ds.queries)
+        rec = recall_at_k(_ids(results), ds.groundtruth, 10)
+        assert rec >= lo, f"{name}: recall {rec} < {lo}"
+
+
+def test_velo_fewer_ios_than_diskann(systems):
+    """Compression + record cache + co-placement must cut I/O per query."""
+    ds, g, qb = systems
+    ios = {}
+    for name in ("velo", "diskann"):
+        cfg = baselines.SystemConfig(buffer_ratio=0.2, batch_size=4)
+        sys_ = baselines.build_system(name, ds.base, g, qb, cfg)
+        _, stats = sys_.run(ds.queries)
+        ios[name] = stats.ios_per_query
+    assert ios["velo"] < ios["diskann"]
+
+
+def test_velo_disk_smaller_than_diskann(systems):
+    ds, g, qb = systems
+    cfg = baselines.SystemConfig()
+    v = baselines.build_system("velo", ds.base, g, qb, cfg)
+    d = baselines.build_system("diskann", ds.base, g, qb, cfg)
+    assert v.disk_bytes() < 0.5 * d.disk_bytes()

@@ -1,0 +1,93 @@
+"""Property tests for the discrete-event engine (paper §3.1 semantics)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import run_workload
+from repro.core.sim import SSD, CostModel, SSDConfig
+
+
+class DictStore:
+    """Minimal page store for synthetic coroutines."""
+
+    def __init__(self, n_pages=64):
+        self.pages = {i: bytes([i % 256]) * 16 for i in range(n_pages)}
+
+    def read_page(self, pid):
+        return self.pages[pid]
+
+
+def make_algo(schedule):
+    """A coroutine following a (kind, arg) schedule; returns visited pages."""
+
+    def algo(qid, _q):
+        got = []
+        for kind, arg in schedule:
+            if kind == "compute":
+                yield ("compute", arg * 1e-6)
+            elif kind == "read":
+                pages = yield ("read", [arg])
+                got.append((arg, pages[arg]))
+            elif kind == "submit":
+                toks = yield ("submit", [arg])
+                res = yield ("wait_any", set(toks))
+                got.append((res[1], res[2]))
+        return got
+
+    return algo
+
+
+ops = st.lists(
+    st.tuples(
+        st.sampled_from(["compute", "read", "submit"]),
+        st.integers(min_value=0, max_value=63),
+    ),
+    min_size=1,
+    max_size=12,
+)
+
+
+@given(schedule=ops, n_queries=st.integers(1, 12),
+       batch=st.integers(1, 6), workers=st.integers(1, 3))
+@settings(max_examples=60, deadline=None)
+def test_engine_completes_and_time_is_sane(schedule, n_queries, batch, workers):
+    """Every query completes with correct data; simulated time is positive and
+    the makespan is bounded by the fully-serial execution."""
+    store = DictStore()
+    queries = np.zeros((n_queries, 2), np.float32)
+    results, stats = run_workload(
+        lambda qid, q: make_algo(schedule)(qid, q),
+        queries, store=store, ssd=SSD(SSDConfig()),
+        cost=CostModel(), n_workers=workers, batch_size=batch,
+    )
+    assert len(results) == n_queries
+    for r in results:
+        assert r is not None
+        for pid, page in r:
+            assert page == store.read_page(pid)
+    n_reads = sum(1 for k, _ in schedule if k in ("read", "submit"))
+    n_comp = sum(a for k, a in schedule if k == "compute")
+    serial = n_queries * (n_reads * 100e-6 + n_comp * 1e-6 + 1e-3)
+    assert 0 <= stats.makespan_s <= serial + 1e-3
+    assert stats.io_count <= n_queries * n_reads  # dedup can only reduce
+
+
+@given(batch=st.integers(2, 8))
+@settings(max_examples=15, deadline=None)
+def test_async_overlap_never_slower(batch):
+    """B>1 must never yield a longer makespan than B=1 for an I/O-heavy mix."""
+    store = DictStore()
+    schedule = [("read", i) for i in range(6)] + [("compute", 5)]
+    queries = np.zeros((8, 2), np.float32)
+
+    def run(B):
+        _, stats = run_workload(
+            lambda qid, q: make_algo(schedule)(qid, q),
+            queries, store=store, ssd=SSD(), cost=CostModel(),
+            n_workers=1, batch_size=B,
+        )
+        return stats.makespan_s
+
+    assert run(batch) <= run(1) * 1.05

@@ -1,0 +1,101 @@
+"""Affinity co-placement invariants (paper §3.4)."""
+
+import numpy as np
+
+from repro.core import placement
+from repro.core.pages import page_lookup, page_records
+
+
+def _payloads(n, rng, lo=40, hi=180):
+    sizes = rng.integers(lo, hi, size=n)
+    blobs = [bytes(rng.integers(0, 256, size=s, dtype=np.uint8)) for s in sizes]
+    return lambda vid: blobs[vid]
+
+
+def test_every_record_placed_exactly_once(rng):
+    n = 500
+    pf = _payloads(n, rng)
+    affinity = {i: [i + 1, i + 2] for i in range(0, 300, 10)}
+    layout = placement.layout_affinity(pf, n, affinity)
+    seen = set()
+    for page in layout.pages:
+        for slot, payload in page_records(page):
+            assert slot.vid not in seen
+            seen.add(slot.vid)
+            assert payload == pf(slot.vid)
+    assert seen == set(range(n))
+
+
+def test_vid_to_page_is_correct(rng):
+    n = 400
+    pf = _payloads(n, rng)
+    affinity = {i: [i + 3, i + 7] for i in range(0, 200, 13)}
+    layout = placement.layout_affinity(pf, n, affinity)
+    for vid in range(n):
+        page = layout.pages[layout.vid_to_page[vid]]
+        assert page_lookup(page, vid) is not None
+
+
+def test_affine_groups_share_page_and_color(rng):
+    n = 600
+    pf = _payloads(n, rng, lo=30, hi=60)  # small records: groups always fit
+    affinity = {i: [i + 1, i + 2, i + 3] for i in range(0, 400, 20)}
+    layout = placement.layout_affinity(pf, n, affinity)
+    colocated = 0
+    total = 0
+    for p, group in affinity.items():
+        members = [p] + group
+        pids = {int(layout.vid_to_page[v]) for v in members}
+        colors = {int(layout.colors[v]) for v in members}
+        total += 1
+        if len(pids) == 1:
+            colocated += 1
+            assert len(colors) == 1 and colors.pop() != 0
+    assert colocated / total > 0.9  # splits only as a last resort
+
+
+def test_non_affine_records_have_color_zero(rng):
+    n = 300
+    pf = _payloads(n, rng)
+    affinity = {10: [11, 12]}
+    layout = placement.layout_affinity(pf, n, affinity)
+    members = {10, 11, 12}
+    for vid in range(n):
+        if vid not in members:
+            assert layout.colors[vid] == 0
+
+
+def test_sequential_and_shuffle_layouts_complete(rng):
+    n = 250
+    pf = _payloads(n, rng)
+    layout = placement.layout_sequential(pf, n)
+    assert sorted(
+        s.vid for page in layout.pages for s, _ in page_records(page)
+    ) == list(range(n))
+
+    adjacency = np.arange(n * 4).reshape(n, 4) % n
+    degrees = np.full(n, 4, dtype=np.int32)
+    layout2 = placement.layout_block_shuffle(pf, n, adjacency.astype(np.int32), degrees)
+    assert sorted(
+        s.vid for page in layout2.pages for s, _ in page_records(page)
+    ) == list(range(n))
+
+
+def test_affinity_layout_improves_colocation(rng, small_ds, small_graph):
+    """The point of §3.4: affine vertices co-located >> sequential layout."""
+    g = small_graph
+    pf = _payloads(g.n, rng, lo=60, hi=100)
+    aff = g.affinity_ids(tau_scale=1.0, cap=8)
+    lay_aff = placement.layout_affinity(pf, g.n, aff)
+    lay_seq = placement.layout_sequential(pf, g.n)
+
+    def coloc_fraction(layout):
+        num = den = 0
+        for p, group in aff.items():
+            for v in group:
+                den += 1
+                if layout.vid_to_page[p] == layout.vid_to_page[v]:
+                    num += 1
+        return num / max(den, 1)
+
+    assert coloc_fraction(lay_aff) > 2 * coloc_fraction(lay_seq)

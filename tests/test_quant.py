@@ -1,0 +1,96 @@
+"""Two-level quantization: estimator quality + refinement error (paper §3.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import flat
+from repro.core.quant import (
+    RabitQuantizer,
+    pack_bits,
+    pack_nibbles,
+    unpack_bits,
+    unpack_nibbles,
+)
+
+
+@given(st.integers(min_value=1, max_value=40), st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_bit_packing_roundtrip(rows, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(rows, 64)).astype(np.uint8)
+    np.testing.assert_array_equal(unpack_bits(pack_bits(bits), 64), bits)
+
+
+@given(st.integers(min_value=1, max_value=40), st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_nibble_packing_roundtrip(rows, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 16, size=(rows, 32)).astype(np.uint8)
+    np.testing.assert_array_equal(unpack_nibbles(pack_nibbles(codes), 32), codes)
+
+
+def test_rotation_preserves_distances(small_ds, small_qb):
+    """The random rotation must be orthonormal: rotated-space distances equal
+    original-space distances."""
+    qb = small_qb
+    r = qb.rotation
+    np.testing.assert_allclose(r @ r.T, np.eye(qb.dim), atol=1e-4)
+
+
+def test_estimator_correlates(small_ds, small_qb):
+    """Level-1 binary estimates must rank-correlate strongly with true dists."""
+    qb = small_qb
+    q = small_ds.queries[0]
+    pq = RabitQuantizer.prepare_query(qb, q)
+    ids = np.arange(400)
+    est = RabitQuantizer.estimate_dist2(qb, pq, ids)
+    ref = ((small_ds.base[ids] - q) ** 2).sum(1)
+    corr = np.corrcoef(est, ref)[0, 1]
+    assert corr > 0.75
+
+
+def test_refinement_tighter_than_estimate(small_ds, small_qb):
+    """Level-2 (4-bit) refinement must be much more accurate than level-1."""
+    qb = small_qb
+    q = small_ds.queries[1]
+    pq = RabitQuantizer.prepare_query(qb, q)
+    ids = np.arange(300)
+    ref = ((small_ds.base[ids] - q) ** 2).sum(1)
+    est1 = RabitQuantizer.estimate_dist2(qb, pq, ids)
+    est2 = RabitQuantizer.refine_dist2(qb, pq, ids)
+    err1 = np.abs(est1 - ref).mean()
+    err2 = np.abs(est2 - ref).mean()
+    assert err2 < 0.5 * err1
+    assert err2 / ref.mean() < 0.15
+
+
+def test_payload_refine_matches_array_refine(small_ds, small_qb):
+    qb = small_qb
+    pq = RabitQuantizer.prepare_query(qb, small_ds.queries[2])
+    for vid in (0, 17, 1234):
+        payload = qb.record_payload(vid)
+        a = RabitQuantizer.refine_dist2_from_payload(qb, pq, payload)
+        b = RabitQuantizer.refine_dist2(qb, pq, np.asarray([vid]))[0]
+        assert a == pytest.approx(float(b), rel=1e-5)
+
+
+def test_ext8_much_tighter_than_ext4(small_ds):
+    qz8 = RabitQuantizer(small_ds.dim, seed=0, ext_bits=8)
+    qb8 = qz8.fit_encode(small_ds.base)
+    qz4 = RabitQuantizer(small_ds.dim, seed=0, ext_bits=4)
+    qb4 = qz4.fit_encode(small_ds.base)
+    q = small_ds.queries[0]
+    ids = np.arange(200)
+    ref = ((small_ds.base[ids] - q) ** 2).sum(1)
+    e8 = np.abs(RabitQuantizer.refine_dist2(qb8, RabitQuantizer.prepare_query(qb8, q), ids) - ref).mean()
+    e4 = np.abs(RabitQuantizer.refine_dist2(qb4, RabitQuantizer.prepare_query(qb4, q), ids) - ref).mean()
+    assert e8 < 0.2 * e4
+
+
+def test_resident_bytes_much_smaller_than_raw(small_ds, small_qb):
+    raw = small_ds.base.nbytes
+    resident = small_qb.resident_bytes() - small_qb.rotation.nbytes
+    # 1 bit/dim + 8 B metadata vs 4 B/dim
+    assert resident < 0.15 * raw

@@ -1,0 +1,114 @@
+"""Device plane: batched beam search + scan search vs host plane / ground truth."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.dataset import recall_at_k
+from repro.velo import batch_search as bs
+from repro.velo import scan_search as ss
+from repro.velo.device_cache import DeviceRecordCache, FREE, MARKED, OCCUPIED
+from repro.velo.index import from_host
+
+
+@pytest.fixture(scope="module")
+def dev_index(small_qb, small_graph):
+    return from_host(small_qb, small_graph)
+
+
+def test_batch_search_recall(small_ds, dev_index):
+    q = jnp.asarray(small_ds.queries)
+    ids, d2, steps = bs.batch_search(dev_index, q, L=48, k=10, max_steps=96)
+    rec = recall_at_k(np.asarray(ids), small_ds.groundtruth, 10)
+    assert rec > 0.6, f"device graph search recall {rec}"
+    assert bool((np.asarray(steps) > 3).all())
+    assert np.isfinite(np.asarray(d2)).all()
+
+
+def test_batch_search_matches_larger_L(small_ds, dev_index):
+    """More beam budget must never hurt recall (monotonicity sanity)."""
+    q = jnp.asarray(small_ds.queries[:30])
+    rs = {}
+    for L in (16, 64):
+        ids, _, _ = bs.batch_search(dev_index, q, L=L, k=10, max_steps=128)
+        rs[L] = recall_at_k(np.asarray(ids), small_ds.groundtruth[:30], 10)
+    assert rs[64] >= rs[16]
+
+
+def test_scan_search_recall(small_ds, dev_index):
+    """Two-stage compressed scan is near-exhaustive: recall limited only by
+    4-bit refinement noise."""
+    q = jnp.asarray(small_ds.queries)
+    ids, d2 = ss.scan_search(dev_index, q, k=10, rerank=64)
+    rec = recall_at_k(np.asarray(ids), small_ds.groundtruth, 10)
+    assert rec > 0.8, f"scan recall {rec}"
+
+
+def test_scan_beats_graph_recall(small_ds, dev_index):
+    """On one shard the exhaustive level-1 scan upper-bounds graph traversal."""
+    q = jnp.asarray(small_ds.queries[:40])
+    ids_g, _, _ = bs.batch_search(dev_index, q, L=48, k=10, max_steps=96)
+    ids_s, _ = ss.scan_search(dev_index, q, k=10, rerank=96)
+    rg = recall_at_k(np.asarray(ids_g), small_ds.groundtruth[:40], 10)
+    rs_ = recall_at_k(np.asarray(ids_s), small_ds.groundtruth[:40], 10)
+    assert rs_ >= rg - 0.02
+
+
+def test_device_matches_host_distance_semantics(small_ds, small_qb, small_graph, dev_index):
+    """Refined distances from the device search equal the host quantizer's."""
+    from repro.core.quant import RabitQuantizer
+
+    q = jnp.asarray(small_ds.queries[:4])
+    ids, d2, _ = bs.batch_search(dev_index, q, L=32, k=5, max_steps=64)
+    ids, d2 = np.asarray(ids), np.asarray(d2)
+    for i in range(4):
+        pq = RabitQuantizer.prepare_query(small_qb, small_ds.queries[i])
+        host = RabitQuantizer.refine_dist2(small_qb, pq, ids[i])
+        np.testing.assert_allclose(d2[i], host, rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------- device cache
+
+
+def test_device_cache_admit_touch_evict():
+    vid_to_page = np.arange(64) // 4
+    c = DeviceRecordCache.create(8, vid_to_page, dim=16, R=4)
+    vids = np.asarray([1, 2, 3])
+    assert not c.resident_mask(vids).any()
+    c.admit(
+        vids,
+        exts=np.zeros((3, 8), np.uint8),
+        los=np.zeros(3), steps_=np.ones(3),
+        adjs=[np.asarray([4, 5]), np.asarray([6]), np.asarray([7, 8, 9])],
+        disk_pages=vid_to_page[vids],
+    )
+    assert c.resident_mask(vids).all()
+    c.touch(vids)
+    assert c.hits == 3
+    # fill and force eviction
+    more = np.arange(10, 20)
+    c.admit(more, np.zeros((10, 8), np.uint8), np.zeros(10), np.ones(10),
+            [np.asarray([0])] * 10, vid_to_page[more])
+    assert (c.slot_state != FREE).sum() == 8
+    assert c.evictions > 0
+    # evicted records' hybrid pointers must point back at their disk pages
+    evicted = [v for v in range(64) if c.record_map[v] < 0]
+    for v in evicted:
+        assert -(c.record_map[v] + 1) == vid_to_page[v]
+
+
+def test_device_cache_second_chance():
+    vid_to_page = np.arange(16)
+    c = DeviceRecordCache.create(2, vid_to_page, dim=8, R=2)
+    c.admit(np.asarray([0, 1]), np.zeros((2, 4), np.uint8), np.zeros(2),
+            np.ones(2), [np.asarray([1]), np.asarray([0])], vid_to_page[:2])
+    c.slot_state[:] = MARKED
+    c.touch(np.asarray([0]))          # vid 0 gets its second chance
+    slot0 = c.record_map[0]
+    assert c.slot_state[slot0] == OCCUPIED
+    c.admit(np.asarray([5]), np.zeros((1, 4), np.uint8), np.zeros(1),
+            np.ones(1), [np.asarray([0])], vid_to_page[5:6])
+    assert c.resident_mask(np.asarray([0]))[0], "hot record must survive"
+    assert not c.resident_mask(np.asarray([1]))[0]
