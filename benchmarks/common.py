@@ -12,11 +12,24 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 
 from repro.core import dataset as dataset_mod  # noqa: E402
+from repro.core import distance as distance_mod  # noqa: E402
 from repro.core import vamana  # noqa: E402
 from repro.core.quant import RabitQuantizer  # noqa: E402
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), ".cache")
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def set_backend(name: str) -> None:
+    """Select the DistanceEngine backend for every system the benchmarks
+    build (threads run.py's --backend flag through SystemConfig's default)."""
+    distance_mod.set_default_backend(name)
+
+
+def active_backend() -> str:
+    """The engine name systems will actually get — 'auto'/'default' resolved,
+    pallas-without-jax degradation applied — so results.json records reality."""
+    return distance_mod.resolved_backend()
 
 
 class Workload:

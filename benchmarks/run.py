@@ -1,10 +1,13 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [--full] [--only NAME]
+  python -m benchmarks.run [--full] [--only NAME] [--backend NAME]
 
 Writes benchmarks/out/results.json and prints each table with the paper
 claims it validates.  --full uses the larger workloads (slower, tighter
-match to the paper's regimes); default is the quick profile.
+match to the paper's regimes); default is the quick profile.  --backend
+selects the DistanceEngine for every system (scalar | batch | pallas);
+each module's record carries the active backend and its wall-clock seconds
+so backend runs can be compared side by side.
 """
 
 from __future__ import annotations
@@ -37,8 +40,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--backend", default=None, choices=["scalar", "batch", "pallas", "auto"],
+        help="DistanceEngine backend for all systems (default: batch)",
+    )
     args = ap.parse_args()
     quick = not args.full
+    if args.backend:
+        common.set_backend(args.backend)
+    print(f"distance backend: {common.active_backend()}")
 
     os.makedirs(common.OUT_DIR, exist_ok=True)
     results = {}
@@ -54,6 +64,8 @@ def main():
             res = {"name": modname, "error": f"{type(e).__name__}: {e}",
                    "traceback": traceback.format_exc()[-2000:], "checks": {}}
         dt = time.time() - t0
+        res["wall_clock_s"] = dt
+        res["distance_backend"] = common.active_backend()
         results[modname] = res
         print(f"\n=== {res.get('name', modname)}  ({dt:.1f}s) ===")
         if "error" in res:

@@ -25,6 +25,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import distance as distance_mod
 from repro.core import search as search_mod
 from repro.core.bufferpool import RecordBufferPool
 from repro.core.dataset import Dataset, recall_at_k
@@ -56,6 +57,7 @@ class SystemConfig:
     co_admit: bool = True         # colored co-admission (§3.4 fetch rule)
     track_access: bool = False    # per-vertex/page counters (Fig. 4)
     seed: int = 0
+    distance_backend: str = "default"  # scalar | batch | pallas | auto | default
 
 
 @dataclasses.dataclass
@@ -223,6 +225,7 @@ def build_system(
         medoid=graph.medoid,
         base=base if name == "inmemory" else None,
         refine_cost_s=refine,
+        dist=distance_mod.get_engine(config.distance_backend),
     )
     return System(
         name=name,
@@ -250,6 +253,7 @@ def evaluate(
     rec = recall_at_k(ids, ds.groundtruth, k)
     return {
         "system": system.name,
+        "distance_backend": system.ctx.dist.name,
         "recall@k": rec,
         "qps": stats.qps,
         "mean_latency_ms": stats.mean_latency_ms,

@@ -1,0 +1,282 @@
+"""The batched distance plane: pluggable DistanceEngine backends.
+
+Every level-1 (binary estimate) and level-2 (extended-code / fp32 refinement)
+distance evaluated by the search plane goes through one of these engines:
+
+  * ``scalar`` — per-row NumPy loop.  Deliberately naive: it is the oracle the
+    other backends are tested against, and the "before" point of the paper's
+    batching argument (one distance per call, no SIMD amortization).
+  * ``batch``  — vectorized NumPy over whole code matrices (the default).
+    One BLAS/ufunc dispatch per frontier batch instead of per vertex.
+  * ``pallas`` — the JAX/Pallas kernels (kernels/binary_ip, kernels/int4_dist)
+    in interpret mode on CPU, compiled on real accelerators.  Falls back to
+    ``batch`` automatically when JAX is not importable.
+
+Selection:
+
+  get_engine("scalar" | "batch" | "pallas" | "auto" | "default" | None)
+
+``auto`` resolves to ``pallas`` when JAX is available, else ``batch``.
+``default`` (and None) resolve to the process-wide default set with
+``set_default_backend`` — the hook benchmarks/run.py's ``--backend`` flag
+threads through without touching every call site.
+
+All engines consume the same packed artifact formats produced by
+``RabitQuantizer.fit_encode`` (bit-packed level-1 codes, nibble-packed level-2
+codes), so the host plane, the simulator, and the device kernels share one
+index image.  Each engine keeps per-instance counters (``DistanceStats``) so
+callers can report how much work the plane absorbed per batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+
+from repro.core.quant import PreparedQuery, QuantizedBase, RabitQuantizer
+
+BACKENDS = ("scalar", "batch", "pallas")
+
+_DEFAULT_BACKEND = "batch"
+
+
+def set_default_backend(name: str) -> None:
+    """Set the process-wide default backend (see ``get_engine``)."""
+    global _DEFAULT_BACKEND
+    if name not in BACKENDS and name != "auto":
+        raise ValueError(f"unknown distance backend {name!r}; expected {BACKENDS}")
+    _DEFAULT_BACKEND = name
+
+
+def default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+def resolved_backend(name: str | None = None) -> str:
+    """The engine name ``get_engine(name)`` would actually serve — resolves
+    ``default``/``auto`` and the pallas-without-jax degradation."""
+    return get_engine(name).name
+
+
+def pallas_available() -> bool:
+    try:
+        import jax  # noqa: F401
+
+        return True
+    except Exception:  # pragma: no cover - exercised only without jax
+        return False
+
+
+@dataclasses.dataclass
+class DistanceStats:
+    """Work counters: calls vs rows show the batching amortization factor."""
+
+    level1_calls: int = 0
+    level1_rows: int = 0
+    level2_calls: int = 0
+    level2_rows: int = 0
+    full_calls: int = 0
+    full_rows: int = 0
+
+    def rows_per_call(self) -> float:
+        calls = self.level1_calls + self.level2_calls + self.full_calls
+        rows = self.level1_rows + self.level2_rows + self.full_rows
+        return rows / calls if calls else 0.0
+
+
+class DistanceEngine:
+    """Base class: counters + empty-batch handling; subclasses implement the
+    three kernels over packed matrices."""
+
+    name = "abstract"
+
+    def __init__(self):
+        self.stats = DistanceStats()
+
+    # ---- level 1: binary estimate ------------------------------------------
+    def estimate(
+        self, qb: QuantizedBase, pq: PreparedQuery, ids: np.ndarray
+    ) -> np.ndarray:
+        """Level-1 estimated squared distances for vertex ids (resident codes)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size == 0:
+            return np.empty(0, dtype=np.float32)
+        self.stats.level1_calls += 1
+        self.stats.level1_rows += ids.size
+        return self._estimate(
+            qb, pq, qb.binary_codes[ids], qb.norms[ids], qb.ip_bar[ids]
+        )
+
+    # ---- level 2: extended-code refinement ---------------------------------
+    def refine(
+        self,
+        qb: QuantizedBase,
+        pq: PreparedQuery,
+        codes: np.ndarray,
+        lo: np.ndarray,
+        step: np.ndarray,
+    ) -> np.ndarray:
+        """Level-2 refined squared distances from packed extended codes."""
+        if codes.shape[0] == 0:
+            return np.empty(0, dtype=np.float32)
+        self.stats.level2_calls += 1
+        self.stats.level2_rows += codes.shape[0]
+        return self._refine(qb, pq, codes, lo, step)
+
+    # ---- exact fp32 (DiskANN-style records, in-memory oracle) --------------
+    def refine_full(self, q: np.ndarray, vectors: np.ndarray) -> np.ndarray:
+        """Exact squared distances from full fp32 vectors to query ``q``."""
+        vectors = np.asarray(vectors, dtype=np.float32)
+        if vectors.shape[0] == 0:
+            return np.empty(0, dtype=np.float32)
+        self.stats.full_calls += 1
+        self.stats.full_rows += vectors.shape[0]
+        return self._refine_full(np.asarray(q, dtype=np.float32), vectors)
+
+    # ---- subclass hooks ----------------------------------------------------
+    def _estimate(self, qb, pq, codes, norms, ip_bar) -> np.ndarray:
+        raise NotImplementedError
+
+    def _refine(self, qb, pq, codes, lo, step) -> np.ndarray:
+        raise NotImplementedError
+
+    def _refine_full(self, q, vectors) -> np.ndarray:
+        raise NotImplementedError
+
+
+class ScalarEngine(DistanceEngine):
+    """One row at a time — the oracle and the pre-batching cost baseline."""
+
+    name = "scalar"
+
+    def _estimate(self, qb, pq, codes, norms, ip_bar):
+        out = np.empty(codes.shape[0], dtype=np.float32)
+        for i in range(codes.shape[0]):
+            out[i] = RabitQuantizer.estimate_batch(
+                qb, pq, codes[i : i + 1], norms[i : i + 1], ip_bar[i : i + 1]
+            )[0]
+        return out
+
+    def _refine(self, qb, pq, codes, lo, step):
+        out = np.empty(codes.shape[0], dtype=np.float32)
+        for i in range(codes.shape[0]):
+            out[i] = RabitQuantizer.refine_batch(
+                qb, pq, codes[i : i + 1], lo[i : i + 1], step[i : i + 1]
+            )[0]
+        return out
+
+    def _refine_full(self, q, vectors):
+        out = np.empty(vectors.shape[0], dtype=np.float32)
+        for i in range(vectors.shape[0]):
+            diff = vectors[i] - q
+            out[i] = diff @ diff
+        return out
+
+
+class BatchEngine(DistanceEngine):
+    """Vectorized NumPy over whole code matrices (default backend)."""
+
+    name = "batch"
+
+    def _estimate(self, qb, pq, codes, norms, ip_bar):
+        return RabitQuantizer.estimate_batch(qb, pq, codes, norms, ip_bar).astype(
+            np.float32, copy=False
+        )
+
+    def _refine(self, qb, pq, codes, lo, step):
+        return RabitQuantizer.refine_batch(qb, pq, codes, lo, step).astype(
+            np.float32, copy=False
+        )
+
+    def _refine_full(self, q, vectors):
+        diff = vectors - q[None, :]
+        return np.einsum("ij,ij->i", diff, diff).astype(np.float32, copy=False)
+
+
+class PallasEngine(BatchEngine):
+    """JAX/Pallas kernels for both quantized levels.
+
+    Row counts are padded up to multiples of ``bucket`` so the jitted kernel
+    wrappers see a small set of static shapes (bounded recompiles) — the
+    frontier size varies every hop.  The exact-fp32 path and the 8-bit
+    extended codes (no int4 kernel applies) stay on the NumPy batch path.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None, bucket: int = 64):
+        super().__init__()
+        import jax  # raises if jax missing
+        import jax.numpy as jnp  # noqa: F401
+
+        from repro.kernels.binary_ip import estimate_dist2 as _binary_est
+        from repro.kernels.int4_dist import int4_dist2 as _int4_dist2
+
+        if interpret is None:
+            # interpret mode on CPU (Pallas has no CPU lowering), compiled
+            # kernels on real accelerators
+            interpret = jax.default_backend() == "cpu"
+        self._jnp = jnp
+        self._binary_est = _binary_est
+        self._int4_dist2 = _int4_dist2
+        self.interpret = interpret
+        self.bucket = bucket
+
+    def _pad_rows(self, m: int) -> int:
+        b = self.bucket
+        return max(b, ((m + b - 1) // b) * b)
+
+    def _estimate(self, qb, pq, codes, norms, ip_bar):
+        m = codes.shape[0]
+        mp = self._pad_rows(m)
+        if mp != m:
+            codes = np.concatenate(
+                [codes, np.zeros((mp - m, codes.shape[1]), dtype=codes.dtype)]
+            )
+            norms = np.concatenate([norms, np.zeros(mp - m, dtype=norms.dtype)])
+            ip_bar = np.concatenate([ip_bar, np.ones(mp - m, dtype=ip_bar.dtype)])
+        out = self._binary_est(
+            pq.qr[None, :], codes, norms, ip_bar, interpret=self.interpret
+        )
+        return np.asarray(out[0, :m], dtype=np.float32)
+
+    def _refine(self, qb, pq, codes, lo, step):
+        if qb.ext_bits != 4:  # the kernel is nibble-packed int4 only
+            return super()._refine(qb, pq, codes, lo, step)
+        m = codes.shape[0]
+        mp = self._pad_rows(m)
+        if mp != m:
+            codes = np.concatenate(
+                [codes, np.zeros((mp - m, codes.shape[1]), dtype=codes.dtype)]
+            )
+            lo = np.concatenate([lo, np.zeros(mp - m, dtype=lo.dtype)])
+            step = np.concatenate([step, np.ones(mp - m, dtype=step.dtype)])
+        out = self._int4_dist2(
+            pq.qr[None, :], codes, lo, step, interpret=self.interpret
+        )
+        return np.asarray(out[0, :m], dtype=np.float32)
+
+
+def get_engine(name: str | None = None) -> DistanceEngine:
+    """Build a fresh engine for ``name`` (see module docstring for the rules)."""
+    if name is None or name == "default":
+        name = _DEFAULT_BACKEND
+    if name == "auto":
+        name = "pallas" if pallas_available() else "batch"
+    if name == "scalar":
+        return ScalarEngine()
+    if name == "batch":
+        return BatchEngine()
+    if name == "pallas":
+        try:
+            return PallasEngine()
+        except ImportError as e:  # no jax: degrade, keep serving
+            warnings.warn(
+                f"pallas distance backend unavailable ({e}); using batch",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return BatchEngine()
+    raise ValueError(f"unknown distance backend {name!r}; expected {BACKENDS}")

@@ -185,6 +185,30 @@ class RabitQuantizer:
         )
 
     @staticmethod
+    def estimate_batch(
+        qb: QuantizedBase,
+        pq: "PreparedQuery",
+        codes: np.ndarray,
+        norms: np.ndarray,
+        ip_bar: np.ndarray,
+    ) -> np.ndarray:
+        """Level-1 estimated squared distances over a packed code matrix.
+
+        ``codes`` is (m, d/8) uint8 — rows of ``qb.binary_codes`` (or any
+        matrix in the same format); ``norms``/``ip_bar`` are the matching
+        per-row resident metadata.  This is the batch primitive the
+        DistanceEngine backends share with the Pallas binary_ip kernel.
+        """
+        d = qb.dim
+        bits = unpack_bits(codes, d).astype(np.float32)
+        signs = 2.0 * bits - 1.0  # {-1, +1}
+        g = (signs @ pq.qunit) / np.sqrt(d)  # <x_bar, q_hat>
+        est_cos = g / np.maximum(ip_bar, 1e-6)
+        est_cos = np.clip(est_cos, -1.0, 1.0)
+        out = pq.qnorm**2 + norms**2 - 2.0 * pq.qnorm * norms * est_cos
+        return out.astype(np.float32, copy=False)
+
+    @staticmethod
     def estimate_dist2(
         qb: QuantizedBase, pq: "PreparedQuery", ids: np.ndarray
     ) -> np.ndarray:
@@ -194,14 +218,9 @@ class RabitQuantizer:
         step iii: "estimates distances to its neighbors using their quantized
         vectors").
         """
-        d = qb.dim
-        bits = unpack_bits(qb.binary_codes[ids], d).astype(np.float32)
-        signs = 2.0 * bits - 1.0  # {-1, +1}
-        g = (signs @ pq.qunit) / np.sqrt(d)  # <x_bar, q_hat>
-        est_cos = g / np.maximum(qb.ip_bar[ids], 1e-6)
-        est_cos = np.clip(est_cos, -1.0, 1.0)
-        nr = qb.norms[ids]
-        return pq.qnorm**2 + nr**2 - 2.0 * pq.qnorm * nr * est_cos
+        return RabitQuantizer.estimate_batch(
+            qb, pq, qb.binary_codes[ids], qb.norms[ids], qb.ip_bar[ids]
+        )
 
     @staticmethod
     def refine_dist2_from_payload(
@@ -218,14 +237,31 @@ class RabitQuantizer:
         return float(diff @ diff)
 
     @staticmethod
+    def refine_batch(
+        qb: QuantizedBase,
+        pq: "PreparedQuery",
+        codes: np.ndarray,
+        lo: np.ndarray,
+        step: np.ndarray,
+    ) -> np.ndarray:
+        """Level-2 refinement over a packed extended-code matrix.
+
+        ``codes`` is (m, d/2) uint8 nibble-packed (or (m, d) for ext_bits=8);
+        ``lo``/``step`` are the matching per-row dequant parameters.  This is
+        the batch primitive shared with the Pallas int4_dist kernel.
+        """
+        rec = qb.decode_ext(codes) * step[:, None] + lo[:, None]
+        diff = pq.qr[None, :] - rec
+        return (diff * diff).sum(axis=1).astype(np.float32, copy=False)
+
+    @staticmethod
     def refine_dist2(
         qb: QuantizedBase, pq: "PreparedQuery", ids: np.ndarray
     ) -> np.ndarray:
         """Vectorized level-2 refinement straight from the arrays (device-plane path)."""
-        codes = qb.decode_ext(qb.ext_codes[ids])
-        rec = codes * qb.ext_step[ids][:, None] + qb.ext_lo[ids][:, None]
-        diff = pq.qr[None, :] - rec
-        return (diff * diff).sum(axis=1)
+        return RabitQuantizer.refine_batch(
+            qb, pq, qb.ext_codes[ids], qb.ext_lo[ids], qb.ext_step[ids]
+        )
 
 
 @dataclasses.dataclass

@@ -15,6 +15,15 @@ The same generator therefore runs unchanged under the synchronous executor
 (B=1) and the asynchronous scheduler (B>1) — which is exactly the paper's
 claim that the *algorithm* is orthogonal to the execution model, and is what
 tests/test_engine.py asserts (async results == sync results).
+
+All distance arithmetic goes through ``SearchContext.dist`` — a pluggable
+DistanceEngine (core.distance) — in frontier-sized batches: every fresh
+neighbor set is scored in one level-1 call, and every record group fetched by
+``get_many`` is refined in one level-2 call.  The simulator charges these as
+one amortized batch (CostModel.estimate_batch_s / refine_batch_s), and the
+backends (scalar oracle, vectorized NumPy, JAX/Pallas kernels) must agree on
+the returned neighbors — tests/test_distance.py asserts exact id/hop/read
+parity across all three.
 """
 
 from __future__ import annotations
@@ -25,6 +34,7 @@ from bisect import insort
 
 import numpy as np
 
+from repro.core import distance as distance_mod
 from repro.core.quant import RabitQuantizer
 from repro.core.sim import CostModel
 
@@ -51,6 +61,11 @@ class SearchContext:
     # CPU charge for one record refinement: 4-bit dequant distance on the
     # compressed index, full fp32 distance on the DiskANN-style index.
     refine_cost_s: float = 0.0
+    dist: object | None = None      # DistanceEngine; None -> process default
+
+    def __post_init__(self):
+        if self.dist is None:
+            self.dist = distance_mod.get_engine()
 
 
 @dataclasses.dataclass
@@ -274,6 +289,30 @@ def _finish(refined: dict[int, float], k: int) -> tuple[np.ndarray, np.ndarray]:
     return ids, ds
 
 
+def _fresh_union(beam: "_Beam", recs: list) -> list[int]:
+    """Unseen neighbors of a record group, deduped, first-occurrence order."""
+    fresh: list[int] = []
+    local: set[int] = set()
+    for rec in recs:
+        for u in rec.adjacency:
+            u = int(u)
+            if u not in beam.seen and u not in local:
+                local.add(u)
+                fresh.append(u)
+    return fresh
+
+
+def _score_into_beam(ctx: SearchContext, pq, beam: "_Beam", fresh: list[int]):
+    """One batched level-1 evaluation of a fresh frontier, inserted into the
+    beam.  (Generator: charges the batch as a single amortized compute op.)"""
+    if not fresh:
+        return
+    yield ("compute", ctx.cost.estimate_batch_s(len(fresh), ctx.qb.dim))
+    ests = ctx.dist.estimate(ctx.qb, pq, np.asarray(fresh))
+    for u, e in zip(fresh, ests):
+        beam.insert(u, float(e))
+
+
 # ----------------------------------------------------------- VeloANN (Alg. 2)
 
 
@@ -285,8 +324,8 @@ def velo_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     pq = RabitQuantizer.prepare_query(qb, q)
 
     beam = _Beam(p.L)
-    yield ("compute", cost.estimate(1, d))
-    est0 = float(RabitQuantizer.estimate_dist2(qb, pq, np.asarray([ctx.medoid]))[0])
+    yield ("compute", cost.estimate_batch_s(1, d))
+    est0 = float(ctx.dist.estimate(qb, pq, np.asarray([ctx.medoid]))[0])
     beam.insert(ctx.medoid, est0)
 
     refined: dict[int, float] = {}
@@ -327,17 +366,12 @@ def velo_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
                     yield op
 
         rec = yield from acc.get(v)  # suspends on miss (Alg. 2 line 17)
-        yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
-        refined[v] = ctx.index.refine_dist2(pq, rec)
+        yield ("compute", cost.refine_batch_s(ctx.refine_cost_s, 1) + cost.visit_overhead_s)
+        refined[v] = float(ctx.index.refine_records(ctx.dist, pq, [rec])[0])
         beam.mark(v)
         hops += 1
 
-        fresh = [int(u) for u in rec.adjacency if int(u) not in beam.seen]
-        if fresh:
-            yield ("compute", cost.estimate(len(fresh), d))
-            ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
-            for u, e in zip(fresh, ests):
-                beam.insert(u, float(e))
+        yield from _score_into_beam(ctx, pq, beam, _fresh_union(beam, [rec]))
 
     ids, ds = _finish(refined, p.k)
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
@@ -355,8 +389,8 @@ def diskann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     pq = RabitQuantizer.prepare_query(qb, q)
 
     beam = _Beam(p.L)
-    yield ("compute", cost.estimate(1, d))
-    est0 = float(RabitQuantizer.estimate_dist2(qb, pq, np.asarray([ctx.medoid]))[0])
+    yield ("compute", cost.estimate_batch_s(1, d))
+    est0 = float(ctx.dist.estimate(qb, pq, np.asarray([ctx.medoid]))[0])
     beam.insert(ctx.medoid, est0)
 
     refined: dict[int, float] = {}
@@ -368,18 +402,20 @@ def diskann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
         if not batch:
             break
         recs = yield from acc.get_many(batch)
-        for v in batch:
-            rec = recs[v]
-            yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
-            refined[v] = ctx.index.refine_dist2(pq, rec)
+        rec_list = [recs[v] for v in batch]
+        # refine the whole fetched record group in one engine call
+        yield (
+            "compute",
+            cost.refine_batch_s(ctx.refine_cost_s, len(batch))
+            + len(batch) * cost.visit_overhead_s,
+        )
+        dists = ctx.index.refine_records(ctx.dist, pq, rec_list)
+        for v, dv in zip(batch, dists):
+            refined[v] = float(dv)
             beam.mark(v)
             hops += 1
-            fresh = [int(u) for u in rec.adjacency if int(u) not in beam.seen]
-            if fresh:
-                yield ("compute", cost.estimate(len(fresh), d))
-                ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
-                for u, e in zip(fresh, ests):
-                    beam.insert(u, float(e))
+        # one batched level-1 scan over the union of fresh neighbors
+        yield from _score_into_beam(ctx, pq, beam, _fresh_union(beam, rec_list))
 
     ids, ds = _finish(refined, p.k)
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
@@ -398,17 +434,13 @@ def starling_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     pq = RabitQuantizer.prepare_query(qb, q)
 
     beam = _Beam(p.L)
-    yield ("compute", cost.estimate(1, d))
-    est0 = float(RabitQuantizer.estimate_dist2(qb, pq, np.asarray([ctx.medoid]))[0])
+    yield ("compute", cost.estimate_batch_s(1, d))
+    est0 = float(ctx.dist.estimate(qb, pq, np.asarray([ctx.medoid]))[0])
     beam.insert(ctx.medoid, est0)
 
     refined: dict[int, float] = {}
     hops = 0
     reads0 = acc.reads
-
-    def expand(rec) -> list:
-        fresh = [int(u) for u in rec.adjacency if int(u) not in beam.seen]
-        return fresh
 
     while True:
         batch = beam.unexplored(limit=max(1, p.W))
@@ -416,24 +448,34 @@ def starling_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
             break
         recs = yield from acc.get_many(batch)
         extra_vids: list[int] = []
+        extra_set: set[int] = set()
         for v in batch:
             pid = index.page_of(v)
             for u in index.page_record_ids(pid):
-                if u not in beam.explored and u not in batch:
+                if u not in beam.explored and u not in batch and u not in extra_set:
+                    extra_set.add(u)
                     extra_vids.append(u)
-        for v in batch + extra_vids:
+        extra_recs: dict[int, object] = {}
+        if extra_vids:
+            # co-resident records: their pages are cached by the batch fetch,
+            # so this decodes in place — no new I/O
+            extra_recs = yield from acc.get_many(extra_vids)
+        group = batch + extra_vids
+        rec_list = [recs[v] if v in recs else extra_recs[v] for v in group]
+        # refine batch members + co-residents in one engine call …
+        yield (
+            "compute",
+            cost.refine_batch_s(ctx.refine_cost_s, len(group))
+            + len(group) * cost.visit_overhead_s,
+        )
+        dists = ctx.index.refine_records(ctx.dist, pq, rec_list)
+        # … then apply the block-search admission filter sequentially: whether
+        # a co-resident enters depends on the window as of its turn
+        for v, rec, dv in zip(group, rec_list, dists):
             if v in beam.explored:
                 continue
-            if v in recs:
-                rec = recs[v]
-            else:
-                # co-resident record: page is cached now, no I/O
-                rec = yield from acc.get(v)
-            yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
-            dist = ctx.index.refine_dist2(pq, rec)
-            # block-search filter: only keep co-resident records that would
-            # enter the current candidate window
-            if v in extra_vids:
+            dist = float(dv)
+            if v in extra_set:
                 window = beam.window()
                 if window and len(window) >= p.L and dist >= window[-1][0]:
                     continue
@@ -441,12 +483,7 @@ def starling_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
             beam.mark(v)
             beam.insert(v, dist)
             hops += 1
-            fresh = expand(rec)
-            if fresh:
-                yield ("compute", cost.estimate(len(fresh), d))
-                ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
-                for u, e in zip(fresh, ests):
-                    beam.insert(u, float(e))
+            yield from _score_into_beam(ctx, pq, beam, _fresh_union(beam, [rec]))
 
     ids, ds = _finish(refined, p.k)
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
@@ -466,8 +503,8 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     pq = RabitQuantizer.prepare_query(qb, q)
 
     beam = _Beam(p.L)
-    yield ("compute", cost.estimate(1, d))
-    est0 = float(RabitQuantizer.estimate_dist2(qb, pq, np.asarray([ctx.medoid]))[0])
+    yield ("compute", cost.estimate_batch_s(1, d))
+    est0 = float(ctx.dist.estimate(qb, pq, np.asarray([ctx.medoid]))[0])
     beam.insert(ctx.medoid, est0)
 
     refined: dict[int, float] = {}
@@ -478,10 +515,10 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
 
     def process(v, rec):
         nonlocal hops
-        refined[v] = ctx.index.refine_dist2(pq, rec)
+        refined[v] = float(ctx.index.refine_records(ctx.dist, pq, [rec])[0])
         beam.mark(v)
         hops += 1
-        return [int(u) for u in rec.adjacency if int(u) not in beam.seen]
+        return _fresh_union(beam, [rec])
 
     while True:
         # fill the pipeline with the best unexplored, uninflight candidates
@@ -490,13 +527,8 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
             v = cands.pop(0)
             if acc.resident(v):
                 rec = yield from acc.get(v)
-                yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
-                fresh = process(v, rec)
-                if fresh:
-                    yield ("compute", cost.estimate(len(fresh), d))
-                    ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
-                    for u, e in zip(fresh, ests):
-                        beam.insert(u, float(e))
+                yield ("compute", cost.refine_batch_s(ctx.refine_cost_s, 1) + cost.visit_overhead_s)
+                yield from _score_into_beam(ctx, pq, beam, process(v, rec))
                 cands = [x for x in beam.unexplored() if x not in inflight]
                 continue
             pid = index.page_of(v)
@@ -522,13 +554,8 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
             acc.pool.admit(v, rec)
         if v in beam.explored:
             continue  # over-fetched: candidate already pruned/processed
-        yield ("compute", ctx.refine_cost_s + cost.visit_overhead_s)
-        fresh = process(v, rec)
-        if fresh:
-            yield ("compute", cost.estimate(len(fresh), d))
-            ests = RabitQuantizer.estimate_dist2(qb, pq, np.asarray(fresh))
-            for u, e in zip(fresh, ests):
-                beam.insert(u, float(e))
+        yield ("compute", cost.refine_batch_s(ctx.refine_cost_s, 1) + cost.visit_overhead_s)
+        yield from _score_into_beam(ctx, pq, beam, process(v, rec))
 
     ids, ds = _finish(refined, p.k)
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
@@ -546,13 +573,11 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     d = base.shape[1]
     graph = ctx.index.graph
 
-    def dist(v: int) -> float:
-        diff = base[v] - q
-        return float(diff @ diff)
-
     beam = _Beam(p.L)
-    yield ("compute", cost.refine_full(d))
-    beam.insert(ctx.medoid, dist(ctx.medoid))
+    yield ("compute", cost.refine_batch_s(cost.refine_full(d), 1))
+    beam.insert(
+        ctx.medoid, float(ctx.dist.refine_full(q, base[[ctx.medoid]])[0])
+    )
     hops = 0
     while True:
         unexp = beam.unexplored(limit=1)
@@ -563,9 +588,12 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
         hops += 1
         nbrs = [int(u) for u in graph.neighbors(v) if int(u) not in beam.seen]
         if nbrs:
-            yield ("compute", len(nbrs) * cost.refine_full(d) + cost.visit_overhead_s)
-            dd = base[np.asarray(nbrs)] - q
-            d2 = np.einsum("ij,ij->i", dd, dd)
+            yield (
+                "compute",
+                cost.refine_batch_s(cost.refine_full(d), len(nbrs))
+                + cost.visit_overhead_s,
+            )
+            d2 = ctx.dist.refine_full(q, base[np.asarray(nbrs)])
             for u, e in zip(nbrs, d2):
                 beam.insert(u, float(e))
 

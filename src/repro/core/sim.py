@@ -65,10 +65,17 @@ class CostModel:
     record_decode_s: float = 0.4e-6      # adjacency decompress + payload split
     io_submit_s: float = 0.5e-6          # io_uring SQE prep + syscall amortized
     coroutine_switch_s: float = 50e-9
+    batch_dispatch_s: float = 0.3e-6     # one kernel/ufunc dispatch per batched
+                                         # distance evaluation, amortized over
+                                         # all rows of the batch
 
     def estimate(self, count: int, dim: int) -> float:
         """Level-1 binary distance estimates for `count` vertices."""
         return count * dim * self.dist_binary_per_dim
+
+    def estimate_batch_s(self, count: int, dim: int) -> float:
+        """One batched level-1 evaluation: per-row flops + one dispatch."""
+        return self.batch_dispatch_s + self.estimate(count, dim)
 
     def refine_ext(self, dim: int) -> float:
         """Level-2 4-bit refinement of one record."""
@@ -77,6 +84,10 @@ class CostModel:
     def refine_full(self, dim: int) -> float:
         """Exact fp32 distance of one record (DiskANN-style refinement)."""
         return dim * self.dist_full_per_dim
+
+    def refine_batch_s(self, per_record_s: float, count: int) -> float:
+        """One batched level-2/fp32 refinement: per-row cost + one dispatch."""
+        return self.batch_dispatch_s + count * per_record_s
 
 
 @dataclasses.dataclass

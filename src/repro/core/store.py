@@ -125,7 +125,7 @@ class VeloIndex:
         return self._decode_payload(vid, payload)
 
     def _decode_payload(self, vid: int, payload: bytes) -> DecodedRecord:
-        ext_len = self.dim // 2 + 8
+        ext_len = (self.dim // 2 if self.qb.ext_bits == 4 else self.dim) + 8
         ext = payload[:ext_len]
         (adj_len,) = struct.unpack_from("<H", payload, ext_len)
         adj = codec_mod.decode_adjacency(
@@ -148,6 +148,28 @@ class VeloIndex:
 
     def refine_dist2(self, pq, rec: DecodedRecord) -> float:
         return RabitQuantizer.refine_dist2_from_payload(self.qb, pq, rec.ext_payload)
+
+    # -- batch access (the distance plane's record-group path) ---------------
+
+    def record_matrix(
+        self, recs: list[DecodedRecord]
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Stack fetched records' level-2 payloads into batch-decodable arrays:
+        packed codes (m, d/2 or d) uint8 + per-row lo/step (m,) float32."""
+        ncode = self.dim // 2 if self.qb.ext_bits == 4 else self.dim
+        buf = np.frombuffer(
+            b"".join(r.ext_payload for r in recs), dtype=np.uint8
+        ).reshape(len(recs), ncode + 8)
+        codes = buf[:, :ncode]
+        tail = np.ascontiguousarray(buf[:, ncode:]).view(np.float32)  # (m, 2)
+        return codes, tail[:, 0].copy(), tail[:, 1].copy()
+
+    def refine_records(self, engine, pq, recs: list[DecodedRecord]) -> np.ndarray:
+        """Level-2 refinement of a fetched record group in one engine call."""
+        if not recs:
+            return np.empty(0, dtype=np.float32)
+        codes, lo, step = self.record_matrix(recs)
+        return engine.refine(self.qb, pq, codes, lo, step)
 
     # -- accounting (Table 3) --------------------------------------------------
 
@@ -262,6 +284,18 @@ class FixedIndex:
     def refine_dist2(self, pq, rec: DecodedRecord) -> float:
         diff = rec.vector.astype(np.float32) - pq.q_orig
         return float(diff @ diff)
+
+    # -- batch access (the distance plane's record-group path) ---------------
+
+    def record_matrix(self, recs: list[DecodedRecord]) -> np.ndarray:
+        """Stack fetched records' fp32 vectors into one (m, d) matrix."""
+        return np.stack([r.vector for r in recs]).astype(np.float32, copy=False)
+
+    def refine_records(self, engine, pq, recs: list[DecodedRecord]) -> np.ndarray:
+        """Exact fp32 refinement of a fetched record group in one engine call."""
+        if not recs:
+            return np.empty(0, dtype=np.float32)
+        return engine.refine_full(pq.q_orig, self.record_matrix(recs))
 
     def disk_bytes(self) -> int:
         return self.store.disk_bytes()

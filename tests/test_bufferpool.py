@@ -1,6 +1,9 @@
 """Record buffer pool state machine (paper §3.2, Fig. 5) — property tests."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
