@@ -1,0 +1,100 @@
+"""Cross-query fused dispatch: B x fuse-budget sweep.
+
+The engine's rendezvous buffer collects the ("score", ...) ops of all
+coroutines in flight on a worker and flushes them as one fused DistanceEngine
+call.  This module measures how the fused-batch size and the total number of
+distance dispatches scale with the coroutine batch B and the flush row budget,
+against the per-query dispatch baseline (fuse off).
+
+Claims checked: fusion cuts total dispatches (the launch-bound -> dispatch-
+bound argument); the fused batch grows with B; recall is unaffected.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import baselines
+from repro.core.dataset import recall_at_k
+
+
+def _run(w, B, fuse, fuse_rows=256):
+    cfg = baselines.SystemConfig(
+        buffer_ratio=0.2,
+        batch_size=B,
+        n_workers=2,
+        fuse=fuse,
+        fuse_rows=fuse_rows,
+        params=baselines.SearchParams(L=48, W=4),
+    )
+    sys_ = baselines.build_system("velo", w.ds.base, w.graph, w.qb, cfg)
+    results, stats = sys_.run(w.ds.queries)
+    return {
+        "B": B,
+        "fuse": fuse,
+        "fuse_rows": fuse_rows if fuse else 0,
+        "recall": recall_at_k(common.result_ids(results), w.ds.groundtruth, 10),
+        "qps": stats.qps,
+        "dist_dispatches": sys_.ctx.dist.stats.dispatches(),
+        "fused_dispatches": sys_.ctx.dist.stats.fused_calls,
+        "requests_per_flush": stats.requests_per_flush,
+        "rows_per_flush": stats.rows_per_flush,
+    }
+
+
+def run(quick: bool = True) -> dict:
+    w = common.sift_like(quick)
+    Bs = [1, 4, 16] if quick else [1, 4, 16, 32]
+    budgets = [64, 512] if quick else [32, 128, 512, 2048]
+
+    points: list[dict] = []
+    for B in Bs:
+        points.append(_run(w, B, fuse=False))
+        for rows in budgets:
+            points.append(_run(w, B, fuse=True, fuse_rows=rows))
+
+    table_rows = [
+        [p["B"], "on" if p["fuse"] else "off", p["fuse_rows"] or "-",
+         f"{p['recall']:.3f}", f"{p['qps']:.0f}", p["dist_dispatches"],
+         f"{p['requests_per_flush']:.2f}", f"{p['rows_per_flush']:.1f}"]
+        for p in points
+    ]
+    text = common.fmt_table(
+        ["B", "fuse", "budget", "recall@10", "QPS", "dispatches",
+         "req/flush", "rows/flush"],
+        table_rows,
+    )
+
+    def pick(B, fuse, rows=None):
+        for p in points:
+            if p["B"] == B and p["fuse"] == fuse and (
+                rows is None or p["fuse_rows"] == rows
+            ):
+                return p
+        raise KeyError((B, fuse, rows))
+
+    bmax = Bs[-1]
+    base = pick(bmax, False)
+    fused = pick(bmax, True, budgets[-1])
+    small = pick(bmax, True, budgets[0])
+    checks = {
+        # the point of the plane: fewer kernel dispatches at the same work
+        "fused_cuts_dispatches": fused["dist_dispatches"] < 0.7 * base["dist_dispatches"],
+        # the rendezvous actually fuses across queries once B > 1
+        "fused_batch_grows_with_B": (
+            fused["requests_per_flush"] > 1.2 * pick(1, True, budgets[-1])["requests_per_flush"]
+        ),
+        # a tighter budget flushes smaller batches
+        "budget_bounds_batch": small["rows_per_flush"] <= fused["rows_per_flush"] + 1e-9,
+        # fusion must not cost recall
+        "recall_parity": abs(fused["recall"] - base["recall"]) < 0.05,
+        # amortized dispatches must not cost simulated throughput
+        "qps_no_worse": fused["qps"] > 0.95 * base["qps"],
+    }
+    dispatch_cut = base["dist_dispatches"] / max(fused["dist_dispatches"], 1)
+    return {
+        "name": "fusion_sweep",
+        "points": points,
+        "dispatch_cut_at_max_B": dispatch_cut,
+        "text": text,
+        "checks": checks,
+    }

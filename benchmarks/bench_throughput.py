@@ -7,24 +7,12 @@ index; PipeANN has lower latency than DiskANN."""
 
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
 from benchmarks import common
 from repro.core import baselines
 from repro.core.dataset import recall_at_k
 
 
 SYSTEMS = ["velo", "diskann", "starling", "pipeann", "inmemory"]
-
-
-def _ids(results, k=10):
-    out = np.full((len(results), k), -1, dtype=np.int64)
-    for i, r in enumerate(results):
-        m = min(k, len(r.ids))
-        out[i, :m] = r.ids[:m]
-    return out
 
 
 def run(quick: bool = True) -> dict:
@@ -42,20 +30,27 @@ def run(quick: bool = True) -> dict:
             )
             sys_ = baselines.build_system(name, w.ds.base, w.graph, w.qb, cfg)
             results, stats = sys_.run(w.ds.queries)
-            rec = recall_at_k(_ids(results), w.ds.groundtruth, 10)
+            rec = recall_at_k(common.result_ids(results), w.ds.groundtruth, 10)
             curves[name].append(
                 {"L": L, "recall": rec, "qps": stats.qps,
                  "latency_ms": stats.mean_latency_ms,
-                 "ios_per_query": stats.ios_per_query}
+                 "ios_per_query": stats.ios_per_query,
+                 # distance-plane dispatch accounting (--fuse comparison axis)
+                 "dist_dispatches": sys_.ctx.dist.stats.dispatches(),
+                 "fused_dispatches": sys_.ctx.dist.stats.fused_calls,
+                 "score_requests_per_flush": stats.requests_per_flush,
+                 "score_rows_per_flush": stats.rows_per_flush}
             )
 
     rows = []
     for name, pts in curves.items():
         for p in pts:
             rows.append([name, p["L"], f"{p['recall']:.3f}", f"{p['qps']:.0f}",
-                         f"{p['latency_ms']:.2f}", f"{p['ios_per_query']:.1f}"])
+                         f"{p['latency_ms']:.2f}", f"{p['ios_per_query']:.1f}",
+                         p["dist_dispatches"]])
     text = common.fmt_table(
-        ["system", "L", "recall@10", "QPS", "latency ms", "IO/query"], rows
+        ["system", "L", "recall@10", "QPS", "latency ms", "IO/query", "dispatches"],
+        rows,
     )
 
     # iso-effort comparison at the middle L

@@ -11,6 +11,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
+from repro.core import baselines as baselines_mod  # noqa: E402
 from repro.core import dataset as dataset_mod  # noqa: E402
 from repro.core import distance as distance_mod  # noqa: E402
 from repro.core import vamana  # noqa: E402
@@ -30,6 +31,18 @@ def active_backend() -> str:
     """The engine name systems will actually get — 'auto'/'default' resolved,
     pallas-without-jax degradation applied — so results.json records reality."""
     return distance_mod.resolved_backend()
+
+
+def set_fuse(on: bool, rows: int | None = None) -> None:
+    """Enable cross-query fused score dispatch for every system the
+    benchmarks build (threads run.py's --fuse flag through SystemConfig)."""
+    baselines_mod.set_default_fuse(on, rows)
+
+
+def fuse_active() -> dict:
+    """The fuse settings systems will actually get, for results.json."""
+    on, rows = baselines_mod.default_fuse()
+    return {"enabled": on, "rows": rows}
 
 
 class Workload:
@@ -74,6 +87,16 @@ def gist_like(quick: bool = True) -> Workload:
         else:
             _WORKLOADS[key] = Workload("gist", n=6000, d=960, n_queries=300, R=32, L=64)
     return _WORKLOADS[key]
+
+
+def result_ids(results, k: int = 10) -> np.ndarray:
+    """Stack per-query QueryResult ids into an (n, k) matrix for recall_at_k,
+    -1-padded when a query returned fewer than k neighbors."""
+    out = np.full((len(results), k), -1, dtype=np.int64)
+    for i, r in enumerate(results):
+        m = min(k, len(r.ids))
+        out[i, :m] = r.ids[:m]
+    return out
 
 
 def fmt_table(headers: list[str], rows: list[list]) -> str:

@@ -1,13 +1,17 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [--full] [--only NAME] [--backend NAME]
+  python -m benchmarks.run [--quick | --full] [--only NAME] [--backend NAME]
+                           [--fuse] [--fuse-rows N]
 
 Writes benchmarks/out/results.json and prints each table with the paper
 claims it validates.  --full uses the larger workloads (slower, tighter
-match to the paper's regimes); default is the quick profile.  --backend
-selects the DistanceEngine for every system (scalar | batch | pallas);
-each module's record carries the active backend and its wall-clock seconds
-so backend runs can be compared side by side.
+match to the paper's regimes); default is the quick profile (--quick makes
+that explicit).  --backend selects the DistanceEngine for every system
+(scalar | batch | pallas); --fuse turns on cross-query fused score dispatch
+(one kernel dispatch serving the frontiers of all coroutines in flight on a
+worker), with --fuse-rows setting the rendezvous flush budget.  Each module's
+record carries the active backend, the fuse settings, and its wall-clock
+seconds so runs can be compared side by side.
 """
 
 from __future__ import annotations
@@ -33,22 +37,33 @@ MODULES = [
     "bench_tau",             # Fig 13
     "bench_breakdown",       # Fig 14
     "bench_index_size",      # Table 3
+    "bench_fusion",          # cross-query fused dispatch: B x fuse-budget sweep
 ]
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="quick profile (the default; kept explicit for CI)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument(
         "--backend", default=None, choices=["scalar", "batch", "pallas", "auto"],
         help="DistanceEngine backend for all systems (default: batch)",
     )
+    ap.add_argument("--fuse", action="store_true",
+                    help="cross-query fused score dispatch for all systems")
+    ap.add_argument("--fuse-rows", type=int, default=None,
+                    help="rendezvous flush row budget (default 256)")
     args = ap.parse_args()
+    if args.quick and args.full:
+        ap.error("--quick and --full are mutually exclusive")
     quick = not args.full
     if args.backend:
         common.set_backend(args.backend)
-    print(f"distance backend: {common.active_backend()}")
+    if args.fuse or args.fuse_rows is not None:
+        common.set_fuse(args.fuse, args.fuse_rows)
+    print(f"distance backend: {common.active_backend()}  fuse: {common.fuse_active()}")
 
     os.makedirs(common.OUT_DIR, exist_ok=True)
     results = {}
@@ -66,6 +81,7 @@ def main():
         dt = time.time() - t0
         res["wall_clock_s"] = dt
         res["distance_backend"] = common.active_backend()
+        res["fuse"] = common.fuse_active()
         results[modname] = res
         print(f"\n=== {res.get('name', modname)}  ({dt:.1f}s) ===")
         if "error" in res:

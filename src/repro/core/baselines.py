@@ -43,6 +43,24 @@ from repro.core.store import FixedIndex, VeloIndex
 from repro.core.vamana import VamanaGraph
 
 
+_DEFAULT_FUSE = False
+_DEFAULT_FUSE_ROWS = 256
+
+
+def set_default_fuse(on: bool, rows: int | None = None) -> None:
+    """Process-wide default for cross-query fused score dispatch — the hook
+    ``benchmarks/run.py --fuse`` threads through (mirrors
+    ``distance.set_default_backend``)."""
+    global _DEFAULT_FUSE, _DEFAULT_FUSE_ROWS
+    _DEFAULT_FUSE = bool(on)
+    if rows is not None:
+        _DEFAULT_FUSE_ROWS = int(rows)
+
+
+def default_fuse() -> tuple[bool, int]:
+    return _DEFAULT_FUSE, _DEFAULT_FUSE_ROWS
+
+
 @dataclasses.dataclass
 class SystemConfig:
     name: str = "velo"
@@ -58,6 +76,8 @@ class SystemConfig:
     track_access: bool = False    # per-vertex/page counters (Fig. 4)
     seed: int = 0
     distance_backend: str = "default"  # scalar | batch | pallas | auto | default
+    fuse: bool | None = None      # cross-query fused dispatch (None -> process default)
+    fuse_rows: int | None = None  # rendezvous flush row budget (None -> default)
 
 
 @dataclasses.dataclass
@@ -88,6 +108,10 @@ class System:
             n_workers=self.config.n_workers,
             batch_size=self.config.batch_size,
             page_size=self.config.page_size,
+            dist=self.ctx.dist,
+            qb=self.ctx.qb,
+            fuse=self.config.fuse,
+            fuse_rows=self.config.fuse_rows,
         )
         hits, misses = self.ctx.accessor.stats()
         stats.cache_hits = hits
@@ -131,7 +155,13 @@ def build_system(
     cost: CostModel | None = None,
 ) -> System:
     config = config or SystemConfig()
-    config = dataclasses.replace(config, name=name)
+    fuse_on, fuse_rows = default_fuse()
+    config = dataclasses.replace(
+        config,
+        name=name,
+        fuse=fuse_on if config.fuse is None else config.fuse,
+        fuse_rows=fuse_rows if config.fuse_rows is None else config.fuse_rows,
+    )
     cost = cost or CostModel()
     n, dim = base.shape
 
@@ -254,13 +284,18 @@ def evaluate(
     return {
         "system": system.name,
         "distance_backend": system.ctx.dist.name,
+        "fuse": bool(system.config.fuse),
         "recall@k": rec,
         "qps": stats.qps,
         "mean_latency_ms": stats.mean_latency_ms,
         "p99_latency_ms": stats.p99_latency_ms(),
         "ios_per_query": stats.ios_per_query,
+        "coalesced_reads": stats.coalesced_reads,
         "hit_rate": stats.hit_rate,
         "disk_bytes": system.disk_bytes(),
         "memory_bytes": system.memory_bytes(),
         "mean_hops": float(np.mean([r.hops for r in results])),
+        "dist_dispatches": system.ctx.dist.stats.dispatches(),
+        "score_requests_per_flush": stats.requests_per_flush,
+        "score_rows_per_flush": stats.rows_per_flush,
     }

@@ -90,10 +90,17 @@ class RecordBufferPool:
     # ----------------------------------------------------------------- admit
 
     def admit(self, vid: int, record: object) -> int:
-        """Load a record into a slot (LOCKED during load, then OCCUPIED)."""
+        """Load a record into a slot (LOCKED during load, then OCCUPIED).
+
+        Returns the slot index, or -1 when the pool is exhausted — every slot
+        LOCKED by an in-flight load (pool smaller than the prefetch window).
+        Callers handle -1 by skipping admission: the record is still returned
+        to the search, it just isn't cached."""
         if self.is_resident(vid):  # duplicate admit (prefetch + demand): keep first
             return self._slot_of(vid)
         slot = self._acquire_slot()
+        if slot < 0:
+            return -1
         self.state[slot] = SlotState.LOCKED
         self.slot_vid[slot] = vid
         self.slots[slot] = record
@@ -104,8 +111,8 @@ class RecordBufferPool:
     def _acquire_slot(self) -> int:
         if self.free_list:
             return self.free_list.pop()
-        freed = self.run_clock(target=1)
-        assert freed, "clock failed to free a slot"
+        if not self.run_clock(target=1):
+            return -1  # every slot LOCKED: nothing is evictable right now
         return self.free_list.pop()
 
     # ----------------------------------------------------------------- clock
@@ -118,7 +125,10 @@ class RecordBufferPool:
         """
         freed = 0
         steps = 0
-        max_steps = 3 * self.n_slots  # two full sweeps guarantee an eviction
+        # up to three full sweeps: one to demote OCCUPIED to MARKED, one to
+        # evict, plus slack for LOCKED slots skipped mid-sweep.  If nothing
+        # freed by then, every slot is LOCKED and the caller must cope.
+        max_steps = 3 * self.n_slots
         while freed < target and steps < max_steps:
             s = self.hand
             self.hand = (self.hand + 1) % self.n_slots

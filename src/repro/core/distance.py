@@ -35,7 +35,7 @@ import warnings
 
 import numpy as np
 
-from repro.core.quant import PreparedQuery, QuantizedBase, RabitQuantizer
+from repro.core.quant import PreparedQuery, QuantizedBase, RabitQuantizer, unpack_bits
 
 BACKENDS = ("scalar", "batch", "pallas")
 
@@ -79,11 +79,42 @@ class DistanceStats:
     level2_rows: int = 0
     full_calls: int = 0
     full_rows: int = 0
+    # cross-query fusion: dispatches that served >1 query's rows at once
+    fused_calls: int = 0
+    fused_queries: int = 0
+
+    def dispatches(self) -> int:
+        """Total kernel/ufunc dispatches issued by this engine instance."""
+        return self.level1_calls + self.level2_calls + self.full_calls
 
     def rows_per_call(self) -> float:
-        calls = self.level1_calls + self.level2_calls + self.full_calls
+        calls = self.dispatches()
         rows = self.level1_rows + self.level2_rows + self.full_rows
         return rows / calls if calls else 0.0
+
+
+@dataclasses.dataclass
+class ScoreRequest:
+    """One coroutine's distance work, yielded to the engine as a ("score", req)
+    op.  The engine collects requests from all ready coroutines on a worker
+    into a rendezvous buffer and executes them as ONE fused DistanceEngine
+    call per kind (see ``execute_requests``), resuming each coroutine with its
+    slice of the results.
+
+    kinds:
+      "estimate" — level-1 binary estimates; payload = vertex-id array
+      "refine"   — level-2 extended-code refinement; payload = (codes, lo, step)
+      "full"     — exact fp32 distances; payload = (m, d) vector matrix
+    ``flop_s`` is the per-row arithmetic cost in simulated seconds (WITHOUT the
+    dispatch overhead — the engine charges one amortized dispatch per flush).
+    """
+
+    kind: str
+    rows: int
+    flop_s: float
+    pq: object = None                 # PreparedQuery ("estimate" / "refine")
+    payload: object = None
+    query: np.ndarray | None = None   # fp32 query vector ("full")
 
 
 class DistanceEngine:
@@ -135,6 +166,116 @@ class DistanceEngine:
         self.stats.full_rows += vectors.shape[0]
         return self._refine_full(np.asarray(q, dtype=np.float32), vectors)
 
+    # ---- fused multi-query dispatch ----------------------------------------
+    # The cross-query batching plane: each method serves SEVERAL queries'
+    # row groups in ONE dispatch (one stats "call").  Single-group batches
+    # delegate to the per-query path, so a rendezvous of one is bitwise
+    # identical to unfused execution.
+
+    def estimate_many(
+        self, qb: QuantizedBase, groups: list[tuple[PreparedQuery, np.ndarray]]
+    ) -> list[np.ndarray]:
+        """Fused level-1 estimates: ``groups`` is (pq, ids) per query; returns
+        the per-query estimate arrays, order preserved."""
+        outs: list = [None] * len(groups)
+        live: list[tuple[int, PreparedQuery, np.ndarray]] = []
+        for i, (pq, ids) in enumerate(groups):
+            ids = np.asarray(ids, dtype=np.int64)
+            if ids.size == 0:
+                outs[i] = np.empty(0, dtype=np.float32)
+            else:
+                live.append((i, pq, ids))
+        if not live:
+            return outs
+        if len(live) == 1:
+            i, pq, ids = live[0]
+            outs[i] = self.estimate(qb, pq, ids)
+            return outs
+        sizes = [ids.size for _, _, ids in live]
+        all_ids = np.concatenate([ids for _, _, ids in live])
+        self.stats.level1_calls += 1
+        self.stats.level1_rows += all_ids.size
+        self.stats.fused_calls += 1
+        self.stats.fused_queries += len(live)
+        res = self._estimate_many(
+            qb,
+            [pq for _, pq, _ in live],
+            sizes,
+            qb.binary_codes[all_ids],
+            qb.norms[all_ids],
+            qb.ip_bar[all_ids],
+        )
+        off = 0
+        for (i, _, _), m in zip(live, sizes):
+            outs[i] = np.asarray(res[off : off + m], dtype=np.float32)
+            off += m
+        return outs
+
+    def refine_many(
+        self,
+        qb: QuantizedBase,
+        groups: list[tuple[PreparedQuery, np.ndarray, np.ndarray, np.ndarray]],
+    ) -> list[np.ndarray]:
+        """Fused level-2 refinement: ``groups`` is (pq, codes, lo, step)."""
+        outs: list = [None] * len(groups)
+        live = []
+        for i, g in enumerate(groups):
+            if g[1].shape[0] == 0:
+                outs[i] = np.empty(0, dtype=np.float32)
+            else:
+                live.append((i, g))
+        if not live:
+            return outs
+        if len(live) == 1:
+            i, (pq, codes, lo, step) = live[0]
+            outs[i] = self.refine(qb, pq, codes, lo, step)
+            return outs
+        sizes = [g[1].shape[0] for _, g in live]
+        codes = np.concatenate([g[1] for _, g in live])
+        lo = np.concatenate([g[2] for _, g in live])
+        step = np.concatenate([g[3] for _, g in live])
+        self.stats.level2_calls += 1
+        self.stats.level2_rows += codes.shape[0]
+        self.stats.fused_calls += 1
+        self.stats.fused_queries += len(live)
+        res = self._refine_many(qb, [g[0] for _, g in live], sizes, codes, lo, step)
+        off = 0
+        for (i, _), m in zip(live, sizes):
+            outs[i] = np.asarray(res[off : off + m], dtype=np.float32)
+            off += m
+        return outs
+
+    def refine_full_many(
+        self, groups: list[tuple[np.ndarray, np.ndarray]]
+    ) -> list[np.ndarray]:
+        """Fused exact-fp32 refinement: ``groups`` is (q, vectors)."""
+        outs: list = [None] * len(groups)
+        live = []
+        for i, (q, vectors) in enumerate(groups):
+            vectors = np.asarray(vectors, dtype=np.float32)
+            if vectors.shape[0] == 0:
+                outs[i] = np.empty(0, dtype=np.float32)
+            else:
+                live.append((i, np.asarray(q, dtype=np.float32), vectors))
+        if not live:
+            return outs
+        if len(live) == 1:
+            i, q, vectors = live[0]
+            outs[i] = self.refine_full(q, vectors)
+            return outs
+        sizes = [v.shape[0] for _, _, v in live]
+        vectors = np.concatenate([v for _, _, v in live])
+        self.stats.full_calls += 1
+        self.stats.full_rows += vectors.shape[0]
+        self.stats.fused_calls += 1
+        self.stats.fused_queries += len(live)
+        res = self._refine_full_many([q for _, q, _ in live], sizes, vectors)
+        off = 0
+        for (i, _, _), m in zip(live, sizes):
+            outs[i] = np.asarray(res[off : off + m], dtype=np.float32)
+            off += m
+        return outs
+
     # ---- subclass hooks ----------------------------------------------------
     def _estimate(self, qb, pq, codes, norms, ip_bar) -> np.ndarray:
         raise NotImplementedError
@@ -144,6 +285,39 @@ class DistanceEngine:
 
     def _refine_full(self, q, vectors) -> np.ndarray:
         raise NotImplementedError
+
+    # Fused-dispatch hooks.  The defaults evaluate per query group over the
+    # stacked matrices (correct everywhere, fused only in accounting); the
+    # batch/pallas backends override them with genuinely fused evaluations.
+    def _estimate_many(self, qb, pqs, sizes, codes, norms, ip_bar) -> np.ndarray:
+        out = np.empty(codes.shape[0], dtype=np.float32)
+        off = 0
+        for pq, m in zip(pqs, sizes):
+            out[off : off + m] = self._estimate(
+                qb, pq, codes[off : off + m], norms[off : off + m],
+                ip_bar[off : off + m],
+            )
+            off += m
+        return out
+
+    def _refine_many(self, qb, pqs, sizes, codes, lo, step) -> np.ndarray:
+        out = np.empty(codes.shape[0], dtype=np.float32)
+        off = 0
+        for pq, m in zip(pqs, sizes):
+            out[off : off + m] = self._refine(
+                qb, pq, codes[off : off + m], lo[off : off + m],
+                step[off : off + m],
+            )
+            off += m
+        return out
+
+    def _refine_full_many(self, qs, sizes, vectors) -> np.ndarray:
+        out = np.empty(vectors.shape[0], dtype=np.float32)
+        off = 0
+        for q, m in zip(qs, sizes):
+            out[off : off + m] = self._refine_full(q, vectors[off : off + m])
+            off += m
+        return out
 
 
 class ScalarEngine(DistanceEngine):
@@ -192,6 +366,35 @@ class BatchEngine(DistanceEngine):
 
     def _refine_full(self, q, vectors):
         diff = vectors - q[None, :]
+        return np.einsum("ij,ij->i", diff, diff).astype(np.float32, copy=False)
+
+    # ---- genuinely fused multi-query paths ---------------------------------
+
+    def _estimate_many(self, qb, pqs, sizes, codes, norms, ip_bar):
+        # One GEMM over the stacked frontier rows of ALL queries: (M, d) signs
+        # times (d, B) stacked unit queries; each row then selects its owner's
+        # column — one dispatch serves B queries.
+        d = qb.dim
+        signs = 2.0 * unpack_bits(codes, d).astype(np.float32) - 1.0  # (M, d)
+        Q = np.stack([pq.qunit for pq in pqs])                        # (B, d)
+        owner = np.repeat(np.arange(len(pqs)), sizes)
+        g = signs @ Q.T                                               # (M, B)
+        g = g[np.arange(g.shape[0]), owner] / np.sqrt(d)
+        est_cos = np.clip(g / np.maximum(ip_bar, 1e-6), -1.0, 1.0)
+        qn = np.asarray([pq.qnorm for pq in pqs], dtype=np.float64)[owner]
+        out = qn**2 + norms**2 - 2.0 * qn * norms * est_cos
+        return out.astype(np.float32, copy=False)
+
+    def _refine_many(self, qb, pqs, sizes, codes, lo, step):
+        rec = qb.decode_ext(codes) * step[:, None] + lo[:, None]      # (M, d)
+        owner = np.repeat(np.arange(len(pqs)), sizes)
+        qr_rows = np.stack([pq.qr for pq in pqs])[owner]              # (M, d)
+        diff = qr_rows - rec
+        return (diff * diff).sum(axis=1).astype(np.float32, copy=False)
+
+    def _refine_full_many(self, qs, sizes, vectors):
+        owner = np.repeat(np.arange(len(qs)), sizes)
+        diff = vectors - np.stack(qs)[owner]
         return np.einsum("ij,ij->i", diff, diff).astype(np.float32, copy=False)
 
 
@@ -258,6 +461,42 @@ class PallasEngine(BatchEngine):
         )
         return np.asarray(out[0, :m], dtype=np.float32)
 
+    # ---- fused multi-query paths: the kernels are (B, N)-shaped already ----
+
+    def _estimate_many(self, qb, pqs, sizes, codes, norms, ip_bar):
+        m = codes.shape[0]
+        mp = self._pad_rows(m)
+        if mp != m:
+            codes = np.concatenate(
+                [codes, np.zeros((mp - m, codes.shape[1]), dtype=codes.dtype)]
+            )
+            norms = np.concatenate([norms, np.zeros(mp - m, dtype=norms.dtype)])
+            ip_bar = np.concatenate([ip_bar, np.ones(mp - m, dtype=ip_bar.dtype)])
+        Q = np.stack([pq.qr for pq in pqs])  # (B, d)
+        out = np.asarray(
+            self._binary_est(Q, codes, norms, ip_bar, interpret=self.interpret)
+        )  # (B, mp)
+        owner = np.repeat(np.arange(len(pqs)), sizes)
+        return out[owner, np.arange(m)].astype(np.float32, copy=False)
+
+    def _refine_many(self, qb, pqs, sizes, codes, lo, step):
+        if qb.ext_bits != 4:  # no int4 kernel: NumPy fused path
+            return super()._refine_many(qb, pqs, sizes, codes, lo, step)
+        m = codes.shape[0]
+        mp = self._pad_rows(m)
+        if mp != m:
+            codes = np.concatenate(
+                [codes, np.zeros((mp - m, codes.shape[1]), dtype=codes.dtype)]
+            )
+            lo = np.concatenate([lo, np.zeros(mp - m, dtype=lo.dtype)])
+            step = np.concatenate([step, np.ones(mp - m, dtype=step.dtype)])
+        Q = np.stack([pq.qr for pq in pqs])  # (B, d)
+        out = np.asarray(
+            self._int4_dist2(Q, codes, lo, step, interpret=self.interpret)
+        )  # (B, mp)
+        owner = np.repeat(np.arange(len(pqs)), sizes)
+        return out[owner, np.arange(m)].astype(np.float32, copy=False)
+
 
 def get_engine(name: str | None = None) -> DistanceEngine:
     """Build a fresh engine for ``name`` (see module docstring for the rules)."""
@@ -280,3 +519,43 @@ def get_engine(name: str | None = None) -> DistanceEngine:
             )
             return BatchEngine()
     raise ValueError(f"unknown distance backend {name!r}; expected {BACKENDS}")
+
+
+def execute_requests(
+    engine: DistanceEngine, qb: QuantizedBase | None, reqs: list[ScoreRequest]
+) -> list[np.ndarray]:
+    """Execute a rendezvous batch of score requests: ONE fused engine call per
+    request kind present, results returned in request order.
+
+    This is the engine scheduler's flush primitive: requests from different
+    coroutines (different queries) sharing a kind are stacked and dispatched
+    together — the Pallas wrappers are (B, N)-shaped, so one kernel launch
+    serves every query in the batch.
+    """
+    out: list = [None] * len(reqs)
+    by_kind: dict[str, list[int]] = {}
+    for i, r in enumerate(reqs):
+        by_kind.setdefault(r.kind, []).append(i)
+    if qb is None and (by_kind.keys() - {"full"}):
+        raise ValueError(
+            "score requests of kind 'estimate'/'refine' need the QuantizedBase: "
+            "pass qb= to the Engine / run_workload executing these coroutines"
+        )
+    for kind, idxs in by_kind.items():
+        if kind == "estimate":
+            res = engine.estimate_many(
+                qb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
+            )
+        elif kind == "refine":
+            res = engine.refine_many(
+                qb, [(reqs[i].pq, *reqs[i].payload) for i in idxs]
+            )
+        elif kind == "full":
+            res = engine.refine_full_many(
+                [(reqs[i].query, reqs[i].payload) for i in idxs]
+            )
+        else:
+            raise ValueError(f"unknown score request kind {kind!r}")
+        for i, r_ in zip(idxs, res):
+            out[i] = r_
+    return out

@@ -18,6 +18,17 @@ Synchronous execution (DiskANN-style) is the degenerate case B=1.
 In-flight page reads are deduplicated (the paper's Locked slot state makes
 concurrent loads of one record coalesce; we apply the same rule at page
 granularity), so a prefetch racing a demand read costs one I/O, not two.
+Coalesced reads are never charged an SQE submission (no SQE was issued) and
+are counted in ``WorkloadStats.coalesced_reads``.
+
+Cross-query fused dispatch (``EngineConfig.fuse``): coroutines yield their
+distance work as ``("score", ScoreRequest)`` ops instead of computing it
+inline.  The scheduler parks score requests from all ready coroutines on a
+worker in a rendezvous buffer and flushes them as ONE fused DistanceEngine
+call per request kind — when the buffered row count reaches ``fuse_rows``, or
+when the worker has nothing else to run — charging a single amortized kernel
+dispatch for the whole batch.  With fusion off, score ops are executed
+immediately (per-query dispatch, PR-1 semantics, bitwise-identical results).
 """
 
 from __future__ import annotations
@@ -29,6 +40,7 @@ from collections.abc import Callable
 
 import numpy as np
 
+from repro.core import distance as distance_mod
 from repro.core.sim import SSD, CostModel, WorkloadStats
 
 
@@ -37,10 +49,13 @@ class EngineConfig:
     n_workers: int = 1
     batch_size: int = 8        # B: coroutines in flight per worker
     page_size: int = 4096
+    fuse: bool = False         # cross-query fused score dispatch
+    fuse_rows: int = 256       # flush the rendezvous buffer at this row budget
 
 
 class _Worker:
-    __slots__ = ("wid", "t", "ready", "active", "deferred_charge", "done_queries")
+    __slots__ = ("wid", "t", "ready", "active", "deferred_charge", "done_queries",
+                 "pending", "pending_rows")
 
     def __init__(self, wid: int):
         self.wid = wid
@@ -49,6 +64,8 @@ class _Worker:
         self.active = 0
         self.deferred_charge = 0.0
         self.done_queries = 0
+        self.pending: list = []      # rendezvous buffer: (gen, qid, ScoreRequest)
+        self.pending_rows = 0
 
 
 class Engine:
@@ -60,11 +77,15 @@ class Engine:
         ssd: SSD,
         cost: CostModel,
         config: EngineConfig,
+        dist=None,                  # DistanceEngine executing score ops
+        qb=None,                    # QuantizedBase for estimate/refine kinds
     ):
         self.store = store
         self.ssd = ssd
         self.cost = cost
         self.config = config
+        self.dist = dist
+        self.qb = qb
 
     def run(
         self,
@@ -72,6 +93,8 @@ class Engine:
         queries: np.ndarray,
     ) -> tuple[list, WorkloadStats]:
         cfg = self.config
+        if self.dist is None:
+            self.dist = distance_mod.get_engine()
         workers = [_Worker(i) for i in range(cfg.n_workers)]
         query_queue: deque[int] = deque(range(len(queries)))
         start_time: dict[int, float] = {}
@@ -81,21 +104,61 @@ class Engine:
         # global completion-event heap: (time, seq, kind, payload)
         events: list = []
         seq = 0
-        # in-flight page reads: pid -> completion_time (dedup window)
+        # in-flight page reads: pid -> completion_time (dedup window), with a
+        # companion heap so completed entries are pruned instead of growing
+        # one-per-page-ever-read over a long run
         inflight: dict[int, float] = {}
+        inflight_heap: list[tuple[float, int]] = []
         token_counter = 0
-        token_info: dict[int, tuple[int, float]] = {}  # token -> (pid, completion)
+        # token -> (pid, completion); owner tracking so a coroutine finishing
+        # with outstanding tokens cannot leak its entries
+        token_info: dict[int, tuple[int, float]] = {}
+        tokens_by_query: dict[int, set[int]] = {}
+        # exposed for tests (leak regression checks inspect them after run)
+        self._inflight = inflight
+        self._token_info = token_info
+        self._tokens_by_query = tokens_by_query
 
-        def issue_read(t: float, pid: int, worker: _Worker) -> float:
-            """Submit one page read with in-flight dedup; returns completion time."""
+        def issue_read(
+            t: float, pid: int, worker: _Worker, charge_submit: bool = False
+        ) -> tuple[float, float]:
+            """Submit one page read with in-flight dedup.  Returns (completion
+            time, new worker time): coalescing with an already in-flight page
+            submits no SQE, so no ``io_submit_s`` is charged for it; genuinely
+            issued reads pay SQE prep BEFORE the device sees the command (only
+            when ``charge_submit`` — the submit/submit_cb ops charge their
+            batch up front instead)."""
+            # Prune dedup entries whose completion no future read can observe.
+            # A worker only matters for the horizon if it can still issue
+            # reads: it has active coroutines, or queries remain to admit
+            # (an idle drained worker would otherwise pin the horizon at its
+            # final time and the dict would grow one entry per page forever).
+            if query_queue:
+                horizon = min(w.t for w in workers)
+            else:
+                horizon = min((w.t for w in workers if w.active > 0),
+                              default=float("inf"))
+            while inflight_heap and inflight_heap[0][0] <= horizon:
+                c, p = heapq.heappop(inflight_heap)
+                if inflight.get(p) == c:
+                    del inflight[p]
             comp = inflight.get(pid)
             if comp is not None and comp > t:
-                return comp
+                stats.coalesced_reads += 1
+                return comp, t
+            if charge_submit:
+                t += self.cost.io_submit_s
             comp = self.ssd.submit(t, cfg.page_size)
             inflight[pid] = comp
+            heapq.heappush(inflight_heap, (comp, pid))
             stats.io_count += 1
             stats.io_bytes += cfg.page_size
-            return comp
+            return comp, t
+
+        def drop_query_tokens(qid: int) -> None:
+            """Forget any tokens a finished coroutine never waited on."""
+            for tok in tokens_by_query.pop(qid, ()):
+                token_info.pop(tok, None)
 
         def push_event(time: float, kind: str, payload) -> None:
             nonlocal seq
@@ -113,7 +176,29 @@ class Engine:
                 elif kind == "resume":
                     worker, gen, value, qid = payload
                     worker.t = max(worker.t, time)
-                    worker.ready.append((gen, value, qid))
+                    worker.ready.append((gen, value, qid, True))
+
+        def flush_scores(w: _Worker) -> None:
+            """Flush the rendezvous buffer: one fused dispatch per request
+            kind, each charged a single amortized ``batch_dispatch_s``; every
+            parked coroutine returns to the ready queue with its result."""
+            pend, w.pending, w.pending_rows = w.pending, [], 0
+            reqs = [r for _, _, r in pend]
+            flop_by_kind: dict[str, float] = {}
+            for r in reqs:
+                flop_by_kind[r.kind] = flop_by_kind.get(r.kind, 0.0) + r.flop_s
+            for flop_s in flop_by_kind.values():
+                w.t += self.cost.fused_batch_s(flop_s)
+            outs = distance_mod.execute_requests(self.dist, self.qb, reqs)
+            stats.score_flushes += len(flop_by_kind)
+            stats.score_requests += len(reqs)
+            stats.score_rows += sum(r.rows for r in reqs)
+            for i, ((gen, qid, _), val) in enumerate(zip(pend, outs)):
+                # the first resume continues straight out of the fused
+                # dispatch — no switch charge, so a rendezvous of one costs
+                # exactly what inline execution costs; every later resume is
+                # a genuine coroutine switch and pays for it
+                w.ready.append((gen, val, qid, i > 0))
 
         def run_worker_action(w: _Worker) -> None:
             """One scheduling action on worker w (paper Fig. 3b loop body)."""
@@ -126,12 +211,17 @@ class Engine:
                     gen = make_coroutine(qid, queries[qid])
                     w.active += 1
                     start_time[qid] = w.t
-                    w.ready.append((gen, None, qid))
+                    w.ready.append((gen, None, qid, True))
+                elif w.pending:
+                    # nothing else can run: flush the rendezvous buffer so the
+                    # parked scorers make progress
+                    flush_scores(w)
                 else:
                     return
 
-            gen, value, qid = w.ready.popleft()
-            w.t += self.cost.coroutine_switch_s
+            gen, value, qid, charge_switch = w.ready.popleft()
+            if charge_switch:
+                w.t += self.cost.coroutine_switch_s
 
             while True:
                 try:
@@ -141,6 +231,7 @@ class Engine:
                     latency = w.t - start_time[qid]
                     stats.sum_latency_s += latency
                     stats.latencies.append(latency)
+                    drop_query_tokens(qid)
                     w.active -= 1
                     w.done_queries += 1
                     return
@@ -149,10 +240,25 @@ class Engine:
                 if kind == "compute":
                     w.t += op[1]
                     value = None
+                elif kind == "score":
+                    req = op[1]
+                    if cfg.fuse:
+                        w.pending.append((gen, qid, req))
+                        w.pending_rows += req.rows
+                        if w.pending_rows >= cfg.fuse_rows:
+                            flush_scores(w)
+                        return  # parked in the rendezvous buffer
+                    # fusion off: execute immediately (per-query dispatch)
+                    w.t += self.cost.fused_batch_s(req.flop_s)
+                    value = distance_mod.execute_requests(
+                        self.dist, self.qb, [req]
+                    )[0]
                 elif kind == "read":
                     pids = op[1]
-                    w.t += self.cost.io_submit_s * max(1, len(pids))
-                    comp = max(issue_read(w.t, pid, w) for pid in pids)
+                    comp = 0.0
+                    for pid in pids:
+                        c, w.t = issue_read(w.t, pid, w, charge_submit=True)
+                        comp = max(comp, c)
                     pages = {pid: self.store.read_page(pid) for pid in pids}
                     push_event(comp, "resume", (w, gen, pages, qid))
                     return  # suspended
@@ -160,7 +266,7 @@ class Engine:
                     _, pids, cb = op
                     w.t += self.cost.io_submit_s
                     for pid in pids:
-                        comp = issue_read(w.t, pid, w)
+                        comp, _ = issue_read(w.t, pid, w)
                         push_event(comp, "callback", (cb, pid, w))
                     value = None
                 elif kind == "submit":
@@ -169,15 +275,19 @@ class Engine:
                     w.t += self.cost.io_submit_s
                     tokens = []
                     for pid in pids:
-                        comp = issue_read(w.t, pid, w)
+                        comp, _ = issue_read(w.t, pid, w)
                         token_counter += 1
                         token_info[token_counter] = (pid, comp)
+                        tokens_by_query.setdefault(qid, set()).add(token_counter)
                         tokens.append(token_counter)
                     value = tokens
                 elif kind == "wait_any":
                     tokens = op[1]
                     tok = min(tokens, key=lambda tk: token_info[tk][1])
                     pid, comp = token_info.pop(tok)
+                    toks = tokens_by_query.get(qid)
+                    if toks is not None:
+                        toks.discard(tok)
                     push_event(
                         comp, "resume", (w, gen, (tok, pid, self.store.read_page(pid)), qid)
                     )
@@ -187,7 +297,11 @@ class Engine:
 
         # ------------------------------------------------------- global loop
         def runnable(w: _Worker) -> bool:
-            return bool(w.ready) or (bool(query_queue) and w.active < cfg.batch_size)
+            return (
+                bool(w.ready)
+                or bool(w.pending)
+                or (bool(query_queue) and w.active < cfg.batch_size)
+            )
 
         while True:
             cand = [w for w in workers if runnable(w)]
@@ -216,12 +330,21 @@ def run_workload(
     n_workers: int = 1,
     batch_size: int = 8,
     page_size: int = 4096,
+    dist=None,
+    qb=None,
+    fuse: bool = False,
+    fuse_rows: int = 256,
 ) -> tuple[list, WorkloadStats]:
     """Convenience wrapper: build an engine, run all queries, return results+stats."""
     engine = Engine(
         store=store,
         ssd=ssd or SSD(),
         cost=cost or CostModel(),
-        config=EngineConfig(n_workers=n_workers, batch_size=batch_size, page_size=page_size),
+        config=EngineConfig(
+            n_workers=n_workers, batch_size=batch_size, page_size=page_size,
+            fuse=fuse, fuse_rows=fuse_rows,
+        ),
+        dist=dist,
+        qb=qb,
     )
     return engine.run(make_coroutine, queries)

@@ -4,6 +4,10 @@ Every algorithm is a Python generator — the host-plane analogue of a stackless
 coroutine.  It yields engine ops and is resumed with their results:
 
     ("compute", seconds)                      -> None
+    ("score", ScoreRequest)                   -> np.ndarray of distances
+                                                 (may suspend: the engine can
+                                                 park the request in its
+                                                 cross-query rendezvous buffer)
     ("read", [pid, ...])                      -> {pid: page_bytes}   (suspends)
     ("submit_cb", [pid, ...], callback)       -> None  (fire-and-forget prefetch;
                                                  callback(pid, bytes) runs at
@@ -16,14 +20,16 @@ The same generator therefore runs unchanged under the synchronous executor
 claim that the *algorithm* is orthogonal to the execution model, and is what
 tests/test_engine.py asserts (async results == sync results).
 
-All distance arithmetic goes through ``SearchContext.dist`` — a pluggable
-DistanceEngine (core.distance) — in frontier-sized batches: every fresh
-neighbor set is scored in one level-1 call, and every record group fetched by
-``get_many`` is refined in one level-2 call.  The simulator charges these as
-one amortized batch (CostModel.estimate_batch_s / refine_batch_s), and the
-backends (scalar oracle, vectorized NumPy, JAX/Pallas kernels) must agree on
-the returned neighbors — tests/test_distance.py asserts exact id/hop/read
-parity across all three.
+Search coroutines never compute a distance themselves: every fresh-neighbor
+frontier and every fetched record group is yielded to the engine as a
+``("score", ScoreRequest)`` op carrying the prepared query and the rows to
+evaluate.  The engine executes it through the pluggable DistanceEngine
+(core.distance) — immediately when fusion is off (per-query dispatch,
+PR-1 semantics), or fused with the frontiers of the OTHER coroutines in
+flight on the worker when fusion is on (one kernel dispatch serving many
+queries).  tests/test_distance.py asserts exact id/hop/read parity across
+backends; tests/test_fusion.py asserts parity between fused and per-query
+dispatch.
 """
 
 from __future__ import annotations
@@ -302,13 +308,43 @@ def _fresh_union(beam: "_Beam", recs: list) -> list[int]:
     return fresh
 
 
+def _estimate_scores(ctx: SearchContext, pq, ids: list[int]):
+    """Yield one level-1 score op for ``ids``; returns the estimate array.
+    The engine charges the batch's flops plus an amortized dispatch — shared
+    with other queries' frontiers when cross-query fusion is on."""
+    req = distance_mod.ScoreRequest(
+        kind="estimate",
+        rows=len(ids),
+        flop_s=ctx.cost.estimate(len(ids), ctx.qb.dim),
+        pq=pq,
+        payload=np.asarray(ids, dtype=np.int64),
+    )
+    ests = yield ("score", req)
+    return ests
+
+
+def _refine_records(ctx: SearchContext, pq, recs: list):
+    """Yield one level-2/fp32 score op refining a fetched record group;
+    returns the refined distance array (one per record, in order)."""
+    kind, payload = ctx.index.refine_payload(recs)
+    req = distance_mod.ScoreRequest(
+        kind=kind,
+        rows=len(recs),
+        flop_s=len(recs) * ctx.refine_cost_s,
+        pq=pq,
+        payload=payload,
+        query=pq.q_orig if kind == "full" else None,
+    )
+    dists = yield ("score", req)
+    return dists
+
+
 def _score_into_beam(ctx: SearchContext, pq, beam: "_Beam", fresh: list[int]):
     """One batched level-1 evaluation of a fresh frontier, inserted into the
-    beam.  (Generator: charges the batch as a single amortized compute op.)"""
+    beam.  (Generator: the engine executes — and may fuse — the score op.)"""
     if not fresh:
         return
-    yield ("compute", ctx.cost.estimate_batch_s(len(fresh), ctx.qb.dim))
-    ests = ctx.dist.estimate(ctx.qb, pq, np.asarray(fresh))
+    ests = yield from _estimate_scores(ctx, pq, fresh)
     for u, e in zip(fresh, ests):
         beam.insert(u, float(e))
 
@@ -324,8 +360,7 @@ def velo_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     pq = RabitQuantizer.prepare_query(qb, q)
 
     beam = _Beam(p.L)
-    yield ("compute", cost.estimate_batch_s(1, d))
-    est0 = float(ctx.dist.estimate(qb, pq, np.asarray([ctx.medoid]))[0])
+    est0 = float((yield from _estimate_scores(ctx, pq, [ctx.medoid]))[0])
     beam.insert(ctx.medoid, est0)
 
     refined: dict[int, float] = {}
@@ -366,8 +401,8 @@ def velo_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
                     yield op
 
         rec = yield from acc.get(v)  # suspends on miss (Alg. 2 line 17)
-        yield ("compute", cost.refine_batch_s(ctx.refine_cost_s, 1) + cost.visit_overhead_s)
-        refined[v] = float(ctx.index.refine_records(ctx.dist, pq, [rec])[0])
+        yield ("compute", cost.visit_overhead_s)
+        refined[v] = float((yield from _refine_records(ctx, pq, [rec]))[0])
         beam.mark(v)
         hops += 1
 
@@ -389,8 +424,7 @@ def diskann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     pq = RabitQuantizer.prepare_query(qb, q)
 
     beam = _Beam(p.L)
-    yield ("compute", cost.estimate_batch_s(1, d))
-    est0 = float(ctx.dist.estimate(qb, pq, np.asarray([ctx.medoid]))[0])
+    est0 = float((yield from _estimate_scores(ctx, pq, [ctx.medoid]))[0])
     beam.insert(ctx.medoid, est0)
 
     refined: dict[int, float] = {}
@@ -404,12 +438,8 @@ def diskann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
         recs = yield from acc.get_many(batch)
         rec_list = [recs[v] for v in batch]
         # refine the whole fetched record group in one engine call
-        yield (
-            "compute",
-            cost.refine_batch_s(ctx.refine_cost_s, len(batch))
-            + len(batch) * cost.visit_overhead_s,
-        )
-        dists = ctx.index.refine_records(ctx.dist, pq, rec_list)
+        yield ("compute", len(batch) * cost.visit_overhead_s)
+        dists = yield from _refine_records(ctx, pq, rec_list)
         for v, dv in zip(batch, dists):
             refined[v] = float(dv)
             beam.mark(v)
@@ -434,8 +464,7 @@ def starling_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     pq = RabitQuantizer.prepare_query(qb, q)
 
     beam = _Beam(p.L)
-    yield ("compute", cost.estimate_batch_s(1, d))
-    est0 = float(ctx.dist.estimate(qb, pq, np.asarray([ctx.medoid]))[0])
+    est0 = float((yield from _estimate_scores(ctx, pq, [ctx.medoid]))[0])
     beam.insert(ctx.medoid, est0)
 
     refined: dict[int, float] = {}
@@ -463,12 +492,8 @@ def starling_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
         group = batch + extra_vids
         rec_list = [recs[v] if v in recs else extra_recs[v] for v in group]
         # refine batch members + co-residents in one engine call …
-        yield (
-            "compute",
-            cost.refine_batch_s(ctx.refine_cost_s, len(group))
-            + len(group) * cost.visit_overhead_s,
-        )
-        dists = ctx.index.refine_records(ctx.dist, pq, rec_list)
+        yield ("compute", len(group) * cost.visit_overhead_s)
+        dists = yield from _refine_records(ctx, pq, rec_list)
         # … then apply the block-search admission filter sequentially: whether
         # a co-resident enters depends on the window as of its turn
         for v, rec, dv in zip(group, rec_list, dists):
@@ -503,8 +528,7 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     pq = RabitQuantizer.prepare_query(qb, q)
 
     beam = _Beam(p.L)
-    yield ("compute", cost.estimate_batch_s(1, d))
-    est0 = float(ctx.dist.estimate(qb, pq, np.asarray([ctx.medoid]))[0])
+    est0 = float((yield from _estimate_scores(ctx, pq, [ctx.medoid]))[0])
     beam.insert(ctx.medoid, est0)
 
     refined: dict[int, float] = {}
@@ -514,11 +538,12 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     inflight: set[int] = set()
 
     def process(v, rec):
+        """Refine + expand one arrived record (generator: scores via engine)."""
         nonlocal hops
-        refined[v] = float(ctx.index.refine_records(ctx.dist, pq, [rec])[0])
+        refined[v] = float((yield from _refine_records(ctx, pq, [rec]))[0])
         beam.mark(v)
         hops += 1
-        return _fresh_union(beam, [rec])
+        yield from _score_into_beam(ctx, pq, beam, _fresh_union(beam, [rec]))
 
     while True:
         # fill the pipeline with the best unexplored, uninflight candidates
@@ -527,8 +552,8 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
             v = cands.pop(0)
             if acc.resident(v):
                 rec = yield from acc.get(v)
-                yield ("compute", cost.refine_batch_s(ctx.refine_cost_s, 1) + cost.visit_overhead_s)
-                yield from _score_into_beam(ctx, pq, beam, process(v, rec))
+                yield ("compute", cost.visit_overhead_s)
+                yield from process(v, rec)
                 cands = [x for x in beam.unexplored() if x not in inflight]
                 continue
             pid = index.page_of(v)
@@ -554,8 +579,8 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
             acc.pool.admit(v, rec)
         if v in beam.explored:
             continue  # over-fetched: candidate already pruned/processed
-        yield ("compute", cost.refine_batch_s(ctx.refine_cost_s, 1) + cost.visit_overhead_s)
-        yield from _score_into_beam(ctx, pq, beam, process(v, rec))
+        yield ("compute", cost.visit_overhead_s)
+        yield from process(v, rec)
 
     ids, ds = _finish(refined, p.k)
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
@@ -573,10 +598,20 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     d = base.shape[1]
     graph = ctx.index.graph
 
+    def full_scores(vectors: np.ndarray):
+        req = distance_mod.ScoreRequest(
+            kind="full",
+            rows=vectors.shape[0],
+            flop_s=vectors.shape[0] * cost.refine_full(d),
+            payload=vectors,
+            query=np.asarray(q, dtype=np.float32),
+        )
+        out = yield ("score", req)
+        return out
+
     beam = _Beam(p.L)
-    yield ("compute", cost.refine_batch_s(cost.refine_full(d), 1))
     beam.insert(
-        ctx.medoid, float(ctx.dist.refine_full(q, base[[ctx.medoid]])[0])
+        ctx.medoid, float((yield from full_scores(base[[ctx.medoid]]))[0])
     )
     hops = 0
     while True:
@@ -588,12 +623,8 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
         hops += 1
         nbrs = [int(u) for u in graph.neighbors(v) if int(u) not in beam.seen]
         if nbrs:
-            yield (
-                "compute",
-                cost.refine_batch_s(cost.refine_full(d), len(nbrs))
-                + cost.visit_overhead_s,
-            )
-            d2 = ctx.dist.refine_full(q, base[np.asarray(nbrs)])
+            yield ("compute", cost.visit_overhead_s)
+            d2 = yield from full_scores(base[np.asarray(nbrs)])
             for u, e in zip(nbrs, d2):
                 beam.insert(u, float(e))
 

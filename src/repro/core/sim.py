@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 
 
 @dataclasses.dataclass
@@ -73,10 +74,6 @@ class CostModel:
         """Level-1 binary distance estimates for `count` vertices."""
         return count * dim * self.dist_binary_per_dim
 
-    def estimate_batch_s(self, count: int, dim: int) -> float:
-        """One batched level-1 evaluation: per-row flops + one dispatch."""
-        return self.batch_dispatch_s + self.estimate(count, dim)
-
     def refine_ext(self, dim: int) -> float:
         """Level-2 4-bit refinement of one record."""
         return dim * self.dist_ext_per_dim
@@ -85,9 +82,11 @@ class CostModel:
         """Exact fp32 distance of one record (DiskANN-style refinement)."""
         return dim * self.dist_full_per_dim
 
-    def refine_batch_s(self, per_record_s: float, count: int) -> float:
-        """One batched level-2/fp32 refinement: per-row cost + one dispatch."""
-        return self.batch_dispatch_s + count * per_record_s
+    def fused_batch_s(self, total_flop_s: float) -> float:
+        """One fused cross-query evaluation: the per-row flops of every
+        participating query's rows plus a SINGLE kernel dispatch, amortized
+        across the whole rendezvous batch (instead of one dispatch per query)."""
+        return self.batch_dispatch_s + total_flop_s
 
 
 @dataclasses.dataclass
@@ -100,8 +99,13 @@ class WorkloadStats:
     latencies: list[float] = dataclasses.field(default_factory=list)
     io_count: int = 0
     io_bytes: int = 0
+    coalesced_reads: int = 0   # reads served by an already in-flight page (no SQE)
     cache_hits: int = 0
     cache_misses: int = 0
+    # cross-query fused score dispatch (engine rendezvous buffer)
+    score_flushes: int = 0     # fused kernel dispatches issued by the engine
+    score_requests: int = 0    # per-coroutine score ops absorbed by those flushes
+    score_rows: int = 0        # total distance rows across all flushes
 
     @property
     def qps(self) -> float:
@@ -115,7 +119,10 @@ class WorkloadStats:
         if not self.latencies:
             return 0.0
         xs = sorted(self.latencies)
-        return 1e3 * xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+        # nearest-rank p99: ceil(0.99 n) - 1.  int(0.99 n) is off by one — it
+        # returns the maximum (p100) for every run with <= 100 queries.
+        rank = min(len(xs) - 1, max(0, math.ceil(0.99 * len(xs)) - 1))
+        return 1e3 * xs[rank]
 
     @property
     def ios_per_query(self) -> float:
@@ -125,3 +132,12 @@ class WorkloadStats:
     def hit_rate(self) -> float:
         tot = self.cache_hits + self.cache_misses
         return self.cache_hits / tot if tot else 0.0
+
+    @property
+    def requests_per_flush(self) -> float:
+        """Mean score ops fused per dispatch (1.0 == no cross-query fusion)."""
+        return self.score_requests / self.score_flushes if self.score_flushes else 0.0
+
+    @property
+    def rows_per_flush(self) -> float:
+        return self.score_rows / self.score_flushes if self.score_flushes else 0.0

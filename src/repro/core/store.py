@@ -171,6 +171,11 @@ class VeloIndex:
         codes, lo, step = self.record_matrix(recs)
         return engine.refine(self.qb, pq, codes, lo, step)
 
+    def refine_payload(self, recs: list[DecodedRecord]):
+        """(kind, payload) of the ScoreRequest refining this record group:
+        quantized records refine on the extended-code path."""
+        return "refine", self.record_matrix(recs)
+
     # -- accounting (Table 3) --------------------------------------------------
 
     def disk_bytes(self) -> int:
@@ -296,6 +301,11 @@ class FixedIndex:
         if not recs:
             return np.empty(0, dtype=np.float32)
         return engine.refine_full(pq.q_orig, self.record_matrix(recs))
+
+    def refine_payload(self, recs: list[DecodedRecord]):
+        """(kind, payload) of the ScoreRequest refining this record group:
+        DiskANN-style records carry full fp32 vectors."""
+        return "full", self.record_matrix(recs)
 
     def disk_bytes(self) -> int:
         return self.store.disk_bytes()

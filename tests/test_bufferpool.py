@@ -96,6 +96,53 @@ def test_state_machine_invariants(ops, n_slots):
         pool.check_invariants()
 
 
+def test_admit_all_locked_pool_returns_sentinel():
+    """Every slot LOCKED by an in-flight load (pool smaller than the prefetch
+    window): admit must signal exhaustion gracefully, not assert-crash."""
+    pool = make_pool(n_slots=4)
+    for vid in range(4):
+        pool.admit(vid, f"r{vid}")
+    pool.state[:] = SlotState.LOCKED
+    slot = pool.admit(40, "r40")
+    assert slot == -1, "exhausted pool must return the -1 sentinel"
+    assert not pool.is_resident(40)
+    pool.check_invariants()
+    # unlocking makes the pool admit again
+    pool.state[:] = SlotState.OCCUPIED
+    assert pool.admit(40, "r40") >= 0
+    assert pool.lookup(40) == "r40"
+
+
+@given(
+    n_slots=st.integers(min_value=1, max_value=8),
+    locked=st.lists(st.booleans(), min_size=8, max_size=8),
+    vids=st.lists(st.integers(min_value=8, max_value=63), min_size=1, max_size=20),
+)
+@settings(max_examples=100, deadline=None)
+def test_admit_under_locked_slots_never_crashes(n_slots, locked, vids):
+    """Admissions into a pool with an arbitrary subset of LOCKED slots (all
+    the way to fully locked) either succeed or return -1 — never crash, never
+    corrupt the state machine, never evict a LOCKED slot."""
+    pool = make_pool(n_slots=n_slots)
+    for vid in range(n_slots):
+        pool.admit(vid, f"r{vid}")
+    for s in range(n_slots):
+        if locked[s]:
+            pool.state[s] = SlotState.LOCKED
+    locked_vids = {int(pool.slot_vid[s]) for s in range(n_slots)
+                   if pool.state[s] == SlotState.LOCKED}
+    for vid in vids:
+        slot = pool.admit(vid, f"r{vid}")
+        if slot == -1:
+            assert all(pool.state == SlotState.LOCKED)
+            assert not pool.is_resident(vid)
+        else:
+            assert pool.lookup(vid) == f"r{vid}"
+        pool.check_invariants()
+    for v in locked_vids:  # in-flight loads must never have been evicted
+        assert pool.is_resident(v)
+
+
 def test_hit_rate_tracks_skew():
     """Skewed access over a small pool must yield a decent hit rate — the
     record-level pool's reason to exist (paper Fig. 4)."""

@@ -1,0 +1,303 @@
+"""Cross-query fused score dispatch: parity + regression tests.
+
+The contract: routing distance work through the engine's rendezvous buffer
+(``EngineConfig.fuse``) must not change what any search returns.
+
+  * With one coroutine per worker (B=1) a rendezvous holds a single request,
+    which the distance plane executes on the exact per-query code path — so
+    fused results are BYTE-IDENTICAL (ids, hops, page reads, and distances)
+    to per-query dispatch for all five algorithms.  Velo's stride prefetch is
+    the one schedule-sensitive piece (suspension points decide when prefetch
+    completions land in the pool — the same reason tests/test_engine.py
+    excludes it from async==sync equality), so velo runs here without it.
+  * At B>1 fusion genuinely interleaves queries; cache-oblivious searches
+    still return identical neighbors, and the schedule-sensitive velo
+    configuration keeps recall parity.
+  * The fused multi-query engine primitives (estimate_many / refine_many /
+    refine_full_many) match the per-query calls row-for-row on every backend.
+
+Also here: regression tests for the engine accounting fixes that rode along
+with the fusion PR (token leaks, coalesced-read charging, nearest-rank p99).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines, distance
+from repro.core.engine import run_workload
+from repro.core.quant import RabitQuantizer
+from repro.core.search import ALGORITHMS
+from repro.core.sim import SSD, CostModel, WorkloadStats
+
+ALGOS = sorted(ALGORITHMS)  # diskann, inmemory, pipeann, starling, velo
+N_QUERIES = 16
+
+
+def _ids(results, k=10):
+    out = np.full((len(results), k), -1, dtype=np.int64)
+    for i, r in enumerate(results):
+        m = min(k, len(r.ids))
+        out[i, :m] = r.ids[:m]
+    return out
+
+
+def _run(name, ds, graph, qb, *, fuse, B=1, fuse_rows=256, params=None,
+         n_queries=N_QUERIES):
+    cfg = baselines.SystemConfig(
+        buffer_ratio=0.2,
+        batch_size=B,
+        fuse=fuse,
+        fuse_rows=fuse_rows,
+        params=params or baselines.SearchParams(L=32, W=4, prefetch=False),
+    )
+    sys_ = baselines.build_system(name, ds.base, graph, qb, cfg)
+    results, stats = sys_.run(ds.queries[:n_queries])
+    return sys_, results, stats
+
+
+# ----------------------------------------------------- end-to-end parity
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_fused_byte_identical_all_algorithms(algo, small_ds, small_graph, small_qb):
+    """B=1: fused dispatch == per-query dispatch, bit for bit."""
+    _, ref, _ = _run(algo, small_ds, small_graph, small_qb, fuse=False)
+    _, got, _ = _run(algo, small_ds, small_graph, small_qb, fuse=True)
+    for i, (r0, r1) in enumerate(zip(ref, got)):
+        np.testing.assert_array_equal(r0.ids, r1.ids, err_msg=f"{algo} q{i}: ids")
+        assert r0.hops == r1.hops, f"{algo} q{i}: hops"
+        assert r0.reads == r1.reads, f"{algo} q{i}: reads"
+        np.testing.assert_array_equal(r0.dists, r1.dists, err_msg=f"{algo} q{i}: dists")
+
+
+def test_fused_async_identical_ids(small_ds, small_graph, small_qb):
+    """B=8 on the cache-oblivious config: fusing frontiers across the eight
+    in-flight queries must not change any query's neighbors."""
+    params = baselines.SearchParams(L=48, W=4, cbs=False, prefetch=False)
+    outs = {}
+    for fuse in (False, True):
+        cfg = baselines.SystemConfig(batch_size=8, buffer_ratio=0.2, fuse=fuse,
+                                     params=params)
+        sys_ = baselines.build_system("+record", small_ds.base, small_graph,
+                                      small_qb, cfg)
+        results, _ = sys_.run(small_ds.queries[:40])
+        outs[fuse] = _ids(results)
+    np.testing.assert_array_equal(outs[False], outs[True])
+
+
+def test_fused_velo_recall_parity(small_ds, small_graph, small_qb):
+    """Default velo (prefetch + cbs) is schedule-sensitive; fusion may change
+    individual traversals but must keep recall."""
+    from repro.core.dataset import recall_at_k
+
+    recalls = {}
+    for fuse in (False, True):
+        cfg = baselines.SystemConfig(batch_size=8, buffer_ratio=0.2, fuse=fuse)
+        sys_ = baselines.build_system("velo", small_ds.base, small_graph,
+                                      small_qb, cfg)
+        results, _ = sys_.run(small_ds.queries)
+        recalls[fuse] = recall_at_k(_ids(results), small_ds.groundtruth, 10)
+    assert abs(recalls[False] - recalls[True]) < 0.05, recalls
+
+
+def test_fusion_reduces_dispatches(small_ds, small_graph, small_qb):
+    """The whole point: B=8 fused must issue fewer kernel dispatches, fusing
+    several queries' rows per flush."""
+    params = baselines.SearchParams(L=48, W=4, cbs=False, prefetch=False)
+    sys_u, _, stats_u = _run("+record", small_ds, small_graph, small_qb,
+                             fuse=False, B=8, params=params, n_queries=40)
+    sys_f, _, stats_f = _run("+record", small_ds, small_graph, small_qb,
+                             fuse=True, B=8, params=params, n_queries=40)
+    assert sys_f.ctx.dist.stats.dispatches() < 0.7 * sys_u.ctx.dist.stats.dispatches()
+    assert stats_f.requests_per_flush > 1.5
+    assert stats_u.score_flushes == 0  # rendezvous counters are fusion-only
+    assert sys_f.ctx.dist.stats.fused_queries >= sys_f.ctx.dist.stats.fused_calls
+
+
+def test_fuse_rows_budget_caps_flush(small_ds, small_graph, small_qb):
+    """A tiny row budget must force small rendezvous batches."""
+    params = baselines.SearchParams(L=48, W=4, cbs=False, prefetch=False)
+    _, _, tight = _run("+record", small_ds, small_graph, small_qb, fuse=True,
+                       B=8, fuse_rows=8, params=params)
+    _, _, loose = _run("+record", small_ds, small_graph, small_qb, fuse=True,
+                       B=8, fuse_rows=4096, params=params)
+    assert tight.rows_per_flush <= loose.rows_per_flush + 1e-9
+
+
+# ------------------------------------------ fused engine primitives
+
+
+@pytest.fixture(scope="module")
+def pqs(small_ds, small_qb):
+    return [
+        RabitQuantizer.prepare_query(small_qb, small_ds.queries[i])
+        for i in range(3)
+    ]
+
+
+@pytest.mark.parametrize("backend", ["scalar", "batch", "pallas"])
+def test_estimate_many_matches_per_query(backend, small_qb, pqs, rng):
+    eng = distance.get_engine(backend)
+    groups = [
+        (pq, rng.integers(0, small_qb.norms.shape[0], m))
+        for pq, m in zip(pqs, (5, 64, 17))
+    ]
+    fused = eng.estimate_many(small_qb, groups)
+    for (pq, ids), out in zip(groups, fused):
+        ref = distance.get_engine(backend).estimate(small_qb, pq, ids)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+    assert eng.stats.fused_calls == 1 and eng.stats.fused_queries == 3
+    assert eng.stats.level1_calls == 1  # one dispatch served three queries
+
+
+@pytest.mark.parametrize("backend", ["scalar", "batch", "pallas"])
+def test_refine_many_matches_per_query(backend, small_qb, pqs, rng):
+    eng = distance.get_engine(backend)
+    groups = []
+    for pq, m in zip(pqs, (1, 63, 30)):
+        ids = rng.integers(0, small_qb.norms.shape[0], m)
+        groups.append((pq, small_qb.ext_codes[ids], small_qb.ext_lo[ids],
+                       small_qb.ext_step[ids]))
+    fused = eng.refine_many(small_qb, groups)
+    for (pq, codes, lo, step), out in zip(groups, fused):
+        ref = distance.get_engine(backend).refine(small_qb, pq, codes, lo, step)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+    assert eng.stats.level2_calls == 1
+
+
+@pytest.mark.parametrize("backend", ["scalar", "batch", "pallas"])
+def test_refine_full_many_matches_per_query(backend, small_qb, rng):
+    eng = distance.get_engine(backend)
+    d = small_qb.dim
+    groups = [
+        (rng.standard_normal(d).astype(np.float32),
+         rng.standard_normal((m, d)).astype(np.float32))
+        for m in (2, 40, 9)
+    ]
+    fused = eng.refine_full_many(groups)
+    for (q, vecs), out in zip(groups, fused):
+        ref = distance.get_engine(backend).refine_full(q, vecs)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
+    assert eng.stats.full_calls == 1
+
+
+def test_many_apis_handle_empty_and_single_groups(small_qb, pqs):
+    eng = distance.get_engine("batch")
+    outs = eng.estimate_many(
+        small_qb,
+        [(pqs[0], np.empty(0, np.int64)), (pqs[1], np.asarray([3, 7]))],
+    )
+    assert outs[0].shape == (0,) and outs[1].shape == (2,)
+    # single live group delegates to the bitwise per-query path, one call
+    ref = distance.get_engine("batch").estimate(small_qb, pqs[1], np.asarray([3, 7]))
+    np.testing.assert_array_equal(outs[1], ref)
+    assert eng.stats.fused_calls == 0 and eng.stats.level1_calls == 1
+    outs = eng.estimate_many(small_qb, [(pqs[0], np.empty(0, np.int64))])
+    assert outs[0].shape == (0,)
+
+
+# ------------------------------------------ engine accounting regressions
+
+
+class _DictStore:
+    def __init__(self, n_pages=64):
+        self.pages = {i: bytes([i % 256]) * 16 for i in range(n_pages)}
+
+    def read_page(self, pid):
+        return self.pages[pid]
+
+
+def test_finished_query_tokens_are_reclaimed():
+    """A coroutine finishing with outstanding submit tokens must not leak
+    its token_info entries (unbounded growth over long runs)."""
+
+    def leaky(qid, _q):
+        toks = yield ("submit", [qid % 8, (qid + 1) % 8, (qid + 2) % 8])
+        res = yield ("wait_any", set(toks))  # waits for ONE, abandons two
+        return res[1]
+
+    from repro.core.engine import Engine, EngineConfig
+
+    engine = Engine(_DictStore(), SSD(), CostModel(), EngineConfig(batch_size=4))
+    results, _ = engine.run(leaky, np.zeros((24, 2), np.float32))
+    assert all(r is not None for r in results)
+    assert engine._token_info == {}, "finished queries leaked submit tokens"
+    assert engine._tokens_by_query == {}
+
+
+def test_inflight_dedup_dict_is_pruned():
+    """The page-dedup dict must not retain one entry per page ever read."""
+
+    def scan(qid, _q):
+        for pid in range(60):
+            yield ("read", [pid])
+        return qid
+
+    from repro.core.engine import Engine, EngineConfig
+
+    engine = Engine(_DictStore(), SSD(), CostModel(), EngineConfig(batch_size=1))
+    engine.run(scan, np.zeros((2, 2), np.float32))
+    # without pruning this would hold all 60 pages; completed windows are
+    # dropped on the next submit, so only the tail survives
+    assert len(engine._inflight) < 10
+
+
+def test_inflight_pruning_survives_idle_worker():
+    """A drained worker sitting at an early clock must not pin the prune
+    horizon (it can issue no further reads, so its time is irrelevant)."""
+
+    def scan(qid, _q):
+        if qid > 0:
+            return qid  # worker 2's only query finishes instantly
+        for pid in range(60):
+            yield ("read", [pid])
+        return qid
+
+    from repro.core.engine import Engine, EngineConfig
+
+    engine = Engine(
+        _DictStore(), SSD(), CostModel(),
+        EngineConfig(n_workers=2, batch_size=1),
+    )
+    results, _ = engine.run(scan, np.zeros((2, 2), np.float32))
+    assert results == [0, 1]
+    assert len(engine._inflight) < 10
+
+
+def test_coalesced_reads_not_charged_and_counted():
+    """Two coroutines demanding one page: a single SQE is charged, the
+    coalesced read is free and counted in WorkloadStats."""
+
+    def demand(qid, _q):
+        pages = yield ("read", [5])
+        return pages[5]
+
+    cost = CostModel()
+    _, stats = run_workload(
+        demand, np.zeros((2, 2), np.float32), store=_DictStore(),
+        cost=cost, ssd=SSD(), n_workers=1, batch_size=2,
+    )
+    assert stats.io_count == 1
+    assert stats.coalesced_reads == 1
+
+    # makespan accounting: B reads of one page must charge ~one submit, not B
+    def run_n(n):
+        _, s = run_workload(
+            demand, np.zeros((n, 2), np.float32), store=_DictStore(),
+            cost=cost, ssd=SSD(), n_workers=1, batch_size=n,
+        )
+        return s
+
+    s8 = run_n(8)
+    assert s8.io_count == 1 and s8.coalesced_reads == 7
+
+
+def test_p99_latency_nearest_rank():
+    stats = WorkloadStats(n_queries=100)
+    stats.latencies = [i / 1000.0 for i in range(1, 101)]  # 1ms .. 100ms
+    # nearest-rank p99 of 100 samples is the 99th value, NOT the max
+    assert stats.p99_latency_ms() == pytest.approx(99.0)
+    stats.latencies = [0.005]
+    assert stats.p99_latency_ms() == pytest.approx(5.0)
+    stats.latencies = []
+    assert stats.p99_latency_ms() == 0.0
