@@ -34,13 +34,24 @@ def run(quick: bool = True) -> dict:
             "qps_frac_of_inmemory": stats.qps / max(mem_stats.qps, 1e-9),
             "latency_x_inmemory": stats.mean_latency_ms
             / max(mem_stats.mean_latency_ms, 1e-9),
+            # shared-pool pressure: how hard the LOCKED-window machinery and
+            # the clock work at this budget (tighter budget -> more churn)
+            "lock_waits": stats.lock_waits,
+            "coalesced_record_loads": stats.coalesced_record_loads,
+            "group_admits": stats.group_admits,
+            "clock_skips": stats.clock_skips,
         })
 
     rows = [[f"{p['ratio']:.0%}", f"{p['qps']:.0f}",
              f"{p['qps_frac_of_inmemory']:.2f}x",
-             f"{p['latency_x_inmemory']:.2f}x"] for p in pts]
-    rows.append(["in-memory", f"{mem_stats.qps:.0f}", "1.00x", "1.00x"])
-    text = common.fmt_table(["buffer ratio", "QPS", "QPS vs mem", "lat vs mem"], rows)
+             f"{p['latency_x_inmemory']:.2f}x",
+             p["coalesced_record_loads"], p["group_admits"],
+             p["clock_skips"]] for p in pts]
+    rows.append(["in-memory", f"{mem_stats.qps:.0f}", "1.00x", "1.00x",
+                 "-", "-", "-"])
+    text = common.fmt_table(
+        ["buffer ratio", "QPS", "QPS vs mem", "lat vs mem",
+         "coalesced", "group admits", "clock skips"], rows)
 
     checks = {
         "qps_improves_with_ratio": pts[-1]["qps"] >= pts[0]["qps"],

@@ -1,10 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
   python -m benchmarks.run [--quick | --full] [--only NAME] [--backend NAME]
-                           [--fuse] [--fuse-rows N]
+                           [--fuse] [--fuse-rows N] [--strict]
 
 Writes benchmarks/out/results.json and prints each table with the paper
-claims it validates.  --full uses the larger workloads (slower, tighter
+claims it validates.  --strict exits non-zero when any module errors or any
+paper-claim check fails, so CI smoke steps turn regressions into build
+failures.  --full uses the larger workloads (slower, tighter
 match to the paper's regimes); default is the quick profile (--quick makes
 that explicit).  --backend selects the DistanceEngine for every system
 (scalar | batch | pallas); --fuse turns on cross-query fused score dispatch
@@ -55,6 +57,8 @@ def main():
                     help="cross-query fused score dispatch for all systems")
     ap.add_argument("--fuse-rows", type=int, default=None,
                     help="rendezvous flush row budget (default 256)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any module errors or any check fails")
     args = ap.parse_args()
     if args.quick and args.full:
         ap.error("--quick and --full are mutually exclusive")
@@ -67,7 +71,7 @@ def main():
 
     os.makedirs(common.OUT_DIR, exist_ok=True)
     results = {}
-    n_checks = n_pass = 0
+    n_checks = n_pass = n_errors = 0
     for modname in MODULES:
         if args.only and args.only not in modname:
             continue
@@ -86,6 +90,7 @@ def main():
         print(f"\n=== {res.get('name', modname)}  ({dt:.1f}s) ===")
         if "error" in res:
             print("ERROR:", res["error"])
+            n_errors += 1
             continue
         print(res["text"])
         for check, ok in res.get("checks", {}).items():
@@ -102,6 +107,8 @@ def main():
         )
     print(f"\n==== paper-claim checks: {n_pass}/{n_checks} pass ====")
     print(f"results -> {path}")
+    if args.strict and (n_errors or n_pass < n_checks):
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -73,6 +73,9 @@ class SystemConfig:
     adj_codec: str = "pef"
     page_policy: str = "lru"
     co_admit: bool = True         # colored co-admission (§3.4 fetch rule)
+    async_load: bool = True       # LOCKED-window loads + record coalescing
+                                  # (False: legacy synchronous per-record admits)
+    group_demote: bool = False    # clock demotes co-admitted groups together
     track_access: bool = False    # per-vertex/page counters (Fig. 4)
     seed: int = 0
     distance_backend: str = "default"  # scalar | batch | pallas | auto | default
@@ -99,6 +102,11 @@ class System:
         self, queries: np.ndarray, ssd_config: SSDConfig | None = None
     ) -> tuple[list, WorkloadStats]:
         ssd = SSD(ssd_config)
+        pool = getattr(self.ctx.accessor, "pool", None)
+        pressure0 = (
+            dict(pool.pressure_stats())
+            if pool is not None and hasattr(pool, "pressure_stats") else None
+        )
         results, stats = run_workload(
             self.make_coroutine,
             queries,
@@ -116,6 +124,12 @@ class System:
         hits, misses = self.ctx.accessor.stats()
         stats.cache_hits = hits
         stats.cache_misses = misses
+        if pressure0 is not None:
+            # the ONE pool instance is shared by all n_workers; report this
+            # run's delta of its pressure counters (the engine counts
+            # lock_waits/coalesced too, but only for ops it scheduled)
+            for key, val in pool.pressure_stats().items():
+                setattr(stats, key, val - pressure0[key])
         return results, stats
 
     # ---- memory accounting (Table 3) ----
@@ -166,11 +180,15 @@ def build_system(
     n, dim = base.shape
 
     def record_pool_for(index) -> RecordAccessor:
+        # ONE pool instance per system: all n_workers' coroutines share it,
+        # coalescing on the same LOCKED windows and hot records.
         budget = config.buffer_ratio * index.disk_bytes()
         n_slots = max(8, int(budget // _record_slot_bytes(dim, graph.R)))
-        pool = RecordBufferPool(min(n_slots, n), index.layout.vid_to_page)
+        pool = RecordBufferPool(min(n_slots, n), index.layout.vid_to_page,
+                                group_demote=config.group_demote)
         return RecordAccessor(index, pool, cost, co_admit=config.co_admit,
-                              track_access=config.track_access)
+                              track_access=config.track_access,
+                              async_load=config.async_load)
 
     def page_cache_for(index) -> PageAccessor:
         budget = config.buffer_ratio * index.disk_bytes()
@@ -292,6 +310,10 @@ def evaluate(
         "ios_per_query": stats.ios_per_query,
         "coalesced_reads": stats.coalesced_reads,
         "hit_rate": stats.hit_rate,
+        "lock_waits": stats.lock_waits,
+        "coalesced_record_loads": stats.coalesced_record_loads,
+        "group_admits": stats.group_admits,
+        "clock_skips": stats.clock_skips,
         "disk_bytes": system.disk_bytes(),
         "memory_bytes": system.memory_bytes(),
         "mean_hops": float(np.mean([r.hops for r in results])),

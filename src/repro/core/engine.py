@@ -21,6 +21,14 @@ granularity), so a prefetch racing a demand read costs one I/O, not two.
 Coalesced reads are never charged an SQE submission (no SQE was issued) and
 are counted in ``WorkloadStats.coalesced_reads``.
 
+Record-level coalescing rides on top of that: a coroutine that hits a record
+whose buffer-pool slot is LOCKED (another coroutine — possibly on another
+worker — began its load) yields ``("load_wait", vid, pool)``.  The scheduler
+parks it on the pool's waiter list; when the loader publishes the record via
+``pool.finish_load`` the pool queues the waiters on ``pending_resumes`` and
+the scheduler turns them into resume events (``WorkloadStats.lock_waits`` /
+``coalesced_record_loads``).  No duplicate page read, no duplicate decode.
+
 Cross-query fused dispatch (``EngineConfig.fuse``): coroutines yield their
 distance work as ``("score", ScoreRequest)`` ops instead of computing it
 inline.  The scheduler parks score requests from all ready coroutines on a
@@ -165,6 +173,25 @@ class Engine:
             heapq.heappush(events, (time, seq, kind, payload))
             seq += 1
 
+        # buffer pools with coroutines parked on LOCKED slots (load_wait op);
+        # their pending_resumes queues are drained after every action that can
+        # publish a record (worker step or prefetch callback)
+        wait_pools: set = set()
+
+        def drain_pool_resumes(now: float) -> None:
+            """Turn records published by finish_load into resume events for
+            the coroutines parked on the LOCKED slot — record-level
+            coalescing across all workers.  The pending check keeps the
+            common (nothing-published) case allocation-free on the hot
+            scheduling path."""
+            for pool in wait_pools:
+                if not pool.pending_resumes:
+                    continue
+                for (wkr, gen, qid), rec in pool.take_resumes():
+                    if rec is not None:
+                        stats.coalesced_record_loads += 1
+                    push_event(now, "resume", (wkr, gen, rec, qid))
+
         def apply_due_events(now: float) -> None:
             """Apply completions (callbacks / worker resumes) due by `now`."""
             while events and events[0][0] <= now:
@@ -173,6 +200,9 @@ class Engine:
                     cb, pid, issuer = payload
                     cb(pid, self.store.read_page(pid))
                     issuer.deferred_charge += self.cost.record_decode_s
+                    # a prefetch callback may finish_load a LOCKED slot:
+                    # resume its waiters at the completion time
+                    drain_pool_resumes(time)
                 elif kind == "resume":
                     worker, gen, value, qid = payload
                     worker.t = max(worker.t, time)
@@ -227,6 +257,7 @@ class Engine:
                 try:
                     op = gen.send(value)
                 except StopIteration as fin:
+                    drain_pool_resumes(w.t)  # publishes from this final step
                     results[qid] = fin.value
                     latency = w.t - start_time[qid]
                     stats.sum_latency_s += latency
@@ -235,6 +266,11 @@ class Engine:
                     w.active -= 1
                     w.done_queries += 1
                     return
+
+                # a finish_load in the step that produced this op resumes its
+                # waiters AT the publish time, before later ops advance w.t
+                if wait_pools:
+                    drain_pool_resumes(w.t)
 
                 kind = op[0]
                 if kind == "compute":
@@ -253,6 +289,19 @@ class Engine:
                     value = distance_mod.execute_requests(
                         self.dist, self.qb, [req]
                     )[0]
+                elif kind == "load_wait":
+                    _, vid, pool = op
+                    if pool.is_loading(vid):
+                        # park on the LOCKED slot; finish_load resumes us with
+                        # the record (one I/O for the whole waiter cohort)
+                        wait_pools.add(pool)
+                        pool.add_waiter(vid, (w, gen, qid))
+                        stats.lock_waits += 1
+                        return  # suspended on the in-flight load
+                    # window already closed (published or aborted) before the
+                    # scheduler saw the op: resolve inline, stat-free — the
+                    # searcher already counted this access as a miss
+                    value = pool.peek_record(vid)
                 elif kind == "read":
                     pids = op[1]
                     comp = 0.0
@@ -311,6 +360,9 @@ class Engine:
                 if next_event_t is not None and next_event_t <= w.t:
                     apply_due_events(w.t)
                 run_worker_action(w)
+                # the action may have published LOCKED slots (finish_load on a
+                # demand path): reschedule the parked waiters now
+                drain_pool_resumes(w.t)
             elif events:
                 t0 = events[0][0]
                 apply_due_events(t0)  # busy-poll: jump to next completion

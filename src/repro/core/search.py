@@ -9,6 +9,11 @@ coroutine.  It yields engine ops and is resumed with their results:
                                                  park the request in its
                                                  cross-query rendezvous buffer)
     ("read", [pid, ...])                      -> {pid: page_bytes}   (suspends)
+    ("load_wait", vid, pool)                  -> decoded record  (suspends:
+                                                 parks on the record's LOCKED
+                                                 buffer-pool slot until the
+                                                 in-flight load publishes it;
+                                                 None if the load was aborted)
     ("submit_cb", [pid, ...], callback)       -> None  (fire-and-forget prefetch;
                                                  callback(pid, bytes) runs at
                                                  completion time)
@@ -88,14 +93,24 @@ class QueryResult:
 class RecordAccessor:
     """Record-level buffer pool access path (paper §3.2): on miss, read the
     page, decode ONLY the needed record (plus same-Color co-residents, §3.4),
-    admit them, discard the rest of the page."""
+    admit them, discard the rest of the page.
+
+    With ``async_load=True`` (the default) misses open a real LOCKED window:
+    the slot is reserved via ``pool.begin_load`` BEFORE the page read is
+    issued and published via ``pool.finish_load`` when it completes, so every
+    concurrent searcher of the same record — on any worker — parks on the
+    slot (engine ``load_wait`` op) instead of re-reading the page; co-resident
+    records are installed as one ``admit_group``.  ``async_load=False``
+    reproduces the legacy per-record synchronous admits (kept for the
+    determinism/parity tests and as the pre-shared-pool baseline)."""
 
     def __init__(self, index, pool, cost: CostModel, co_admit: bool = True,
-                 track_access: bool = False):
+                 track_access: bool = False, async_load: bool = True):
         self.index = index
         self.pool = pool
         self.cost = cost
         self.co_admit = co_admit
+        self.async_load = async_load
         self.reads = 0
         # per-vertex / per-page access counters (Fig. 4 skew study)
         self.track_access = track_access
@@ -110,7 +125,9 @@ class RecordAccessor:
             self.page_counts[self.index.page_of(vid)] += 1
 
     def resident(self, vid: int) -> bool:
-        return self.pool.peek_resident(vid)
+        # Alg. 2's InMemory(): a LOCKED slot is NOT in memory — pivoting to
+        # it would block on the in-flight load instead of avoiding an I/O.
+        return self.pool.peek_present(vid)
 
     def _admit_from_page(self, vid: int, page: bytes):
         rec = self.index.decode_record(vid, page)
@@ -120,29 +137,63 @@ class RecordAccessor:
                 self.pool.admit(extra.vid, extra)
         return rec
 
+    def _publish_from_page(self, vid: int, page: bytes):
+        """Close vid's LOCKED window with the decoded record and install its
+        co-resident group under one clock interaction."""
+        rec = self.index.decode_record(vid, page)
+        self.pool.finish_load(vid, rec)
+        if self.co_admit:
+            extras = self.index.co_resident_records(vid, page)
+            if extras:
+                self.pool.admit_group([e.vid for e in extras], extras)
+        return rec
+
+    def _demand_load(self, vid: int):
+        """Demand-read vid's page and publish (or sync-admit) its record.
+        The access was already counted/tracked by the caller."""
+        slot = self.pool.begin_load(vid) if self.async_load else -1
+        pid = self.index.page_of(vid)
+        pages = yield ("read", [pid])
+        self.reads += 1
+        yield ("compute", self.cost.page_parse_s + self.cost.record_decode_s)
+        if slot >= 0:
+            return self._publish_from_page(vid, pages[pid])
+        # legacy path, or pool exhausted (every slot LOCKED): sync admit
+        return self._admit_from_page(vid, pages[pid])
+
     def get(self, vid: int):
         self._track(vid)
         rec = self.pool.lookup(vid)
         if rec is not None:
             return rec
-        pid = self.index.page_of(vid)
-        pages = yield ("read", [pid])
-        self.reads += 1
-        yield ("compute", self.cost.page_parse_s + self.cost.record_decode_s)
-        return self._admit_from_page(vid, pages[pid])
+        if self.async_load:
+            while self.pool.is_loading(vid):
+                # coalesce on the in-flight load instead of re-reading
+                rec = yield ("load_wait", vid, self.pool)
+                if rec is not None:
+                    return rec
+                # load aborted: fall through and issue our own
+        return (yield from self._demand_load(vid))
 
     def get_many(self, vids: list[int]):
         out: dict[int, object] = {}
         missing: list[int] = []
+        loading: list[int] = []
         for v in vids:
             self._track(v)
             rec = self.pool.lookup(v)
             if rec is not None:
                 out[v] = rec
+            elif self.async_load and self.pool.is_loading(v):
+                loading.append(v)
             else:
                 missing.append(v)
         if missing:
             pids = sorted({self.index.page_of(v) for v in missing})
+            slots = (
+                {v: self.pool.begin_load(v) for v in missing}
+                if self.async_load else {}
+            )
             pages = yield ("read", pids)
             self.reads += len(pids)
             yield (
@@ -151,14 +202,41 @@ class RecordAccessor:
                 + len(missing) * self.cost.record_decode_s,
             )
             for v in missing:
-                out[v] = self._admit_from_page(v, pages[self.index.page_of(v)])
+                page = pages[self.index.page_of(v)]
+                if slots.get(v, -1) >= 0:
+                    out[v] = self._publish_from_page(v, page)
+                else:
+                    out[v] = self._admit_from_page(v, page)
+        # park on other coroutines' in-flight loads LAST: our own loads are
+        # already published, so the loaders we wait on can never be waiting
+        # on us (no cross-coroutine deadlock)
+        for v in loading:
+            rec = yield ("load_wait", v, self.pool)
+            while rec is None:  # window closed empty (abort, or published
+                # then evicted before we were scheduled): load it ourselves —
+                # WITHOUT re-tracking the access, which was already counted
+                if self.pool.is_loading(v):
+                    rec = yield ("load_wait", v, self.pool)
+                else:
+                    rec = yield from self._demand_load(v)
+            out[v] = rec
         return out
 
     def prefetch_op(self, vid: int):
-        """Return a fire-and-forget op loading vid's record, or None if resident."""
+        """Return a fire-and-forget op loading vid's record, or None if the
+        record is already present or its load is already in flight."""
         if self.pool.peek_resident(vid):
             return None
         pid = self.index.page_of(vid)
+
+        if self.async_load:
+            slot = self.pool.begin_load(vid)
+            if slot >= 0:
+                def on_publish(_pid: int, page: bytes) -> None:
+                    self._publish_from_page(vid, page)
+
+                return ("submit_cb", [pid], on_publish)
+            # every slot LOCKED: fall back to the uncached legacy prefetch
 
         def on_complete(_pid: int, page: bytes) -> None:
             if not self.pool.peek_resident(vid):

@@ -102,6 +102,11 @@ class WorkloadStats:
     coalesced_reads: int = 0   # reads served by an already in-flight page (no SQE)
     cache_hits: int = 0
     cache_misses: int = 0
+    # record buffer pool pressure (shared pool, LOCKED-window coalescing)
+    lock_waits: int = 0              # coroutines parked on a LOCKED slot
+    coalesced_record_loads: int = 0  # parked waiters served by another's load
+    group_admits: int = 0            # co-resident groups admitted in one clock
+    clock_skips: int = 0             # clock steps that landed on LOCKED slots
     # cross-query fused score dispatch (engine rendezvous buffer)
     score_flushes: int = 0     # fused kernel dispatches issued by the engine
     score_requests: int = 0    # per-coroutine score ops absorbed by those flushes

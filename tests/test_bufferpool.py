@@ -1,11 +1,8 @@
-"""Record buffer pool state machine (paper §3.2, Fig. 5) — property tests."""
+"""Record buffer pool state machine (paper §3.2, Fig. 5) — deterministic unit
+tests.  Randomized property/stateful coverage (hypothesis) lives in
+tests/test_bufferpool_stateful.py."""
 
 import numpy as np
-import pytest
-
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.bufferpool import RESIDENT_BIT, RecordBufferPool, SlotState
 
@@ -69,78 +66,195 @@ def test_duplicate_admit_is_idempotent():
     assert pool.lookup(7) == "a"
 
 
-@given(
-    ops=st.lists(
-        st.tuples(st.sampled_from(["lookup", "admit", "clock"]),
-                  st.integers(min_value=0, max_value=63)),
-        min_size=1, max_size=300,
-    ),
-    n_slots=st.integers(min_value=1, max_value=16),
-)
-@settings(max_examples=100, deadline=None)
-def test_state_machine_invariants(ops, n_slots):
-    """Arbitrary op sequences never violate the Fig. 5 state machine."""
-    pool = make_pool(n_slots=n_slots)
-    for op, vid in ops:
-        if op == "lookup":
-            rec = pool.lookup(vid)
-            if rec is not None:
-                assert rec == f"r{vid}"
-        elif op == "admit":
-            if not pool.is_resident(vid):
-                pool.admit(vid, f"r{vid}")
-            slot = int(pool.record_map[vid] & ~RESIDENT_BIT)
-            assert pool.state[slot] in (SlotState.OCCUPIED, SlotState.MARKED)
-        else:
-            pool.run_clock(target=1 + vid % 3)
-        pool.check_invariants()
-
-
 def test_admit_all_locked_pool_returns_sentinel():
     """Every slot LOCKED by an in-flight load (pool smaller than the prefetch
     window): admit must signal exhaustion gracefully, not assert-crash."""
     pool = make_pool(n_slots=4)
     for vid in range(4):
-        pool.admit(vid, f"r{vid}")
-    pool.state[:] = SlotState.LOCKED
+        assert pool.begin_load(vid) >= 0   # four in-flight loads pin the pool
     slot = pool.admit(40, "r40")
     assert slot == -1, "exhausted pool must return the -1 sentinel"
     assert not pool.is_resident(40)
     pool.check_invariants()
-    # unlocking makes the pool admit again
-    pool.state[:] = SlotState.OCCUPIED
+    # publishing the loads makes the pool admit again
+    for vid in range(4):
+        pool.finish_load(vid, f"r{vid}")
     assert pool.admit(40, "r40") >= 0
     assert pool.lookup(40) == "r40"
 
 
-@given(
-    n_slots=st.integers(min_value=1, max_value=8),
-    locked=st.lists(st.booleans(), min_size=8, max_size=8),
-    vids=st.lists(st.integers(min_value=8, max_value=63), min_size=1, max_size=20),
-)
-@settings(max_examples=100, deadline=None)
-def test_admit_under_locked_slots_never_crashes(n_slots, locked, vids):
-    """Admissions into a pool with an arbitrary subset of LOCKED slots (all
-    the way to fully locked) either succeed or return -1 — never crash, never
-    corrupt the state machine, never evict a LOCKED slot."""
-    pool = make_pool(n_slots=n_slots)
-    for vid in range(n_slots):
+# ------------------------------------------------- LOCKED windows + waiters
+
+
+def test_begin_finish_load_window():
+    """begin_load opens a LOCKED window (miss, not readable); finish_load
+    publishes it (hit)."""
+    pool = make_pool()
+    slot = pool.begin_load(9)
+    assert slot >= 0
+    assert pool.status(9) == "loading"
+    assert pool.is_loading(9)
+    assert pool.peek_resident(9) and not pool.peek_present(9)
+    assert pool.lookup(9) is None            # LOCKED is a miss, not a hit
+    assert pool.misses == 1
+    assert pool.finish_load(9, "r9") == slot
+    assert pool.status(9) == "present"
+    assert pool.lookup(9) == "r9"
+    pool.check_invariants()
+
+
+def test_waiters_coalesce_on_locked_slot():
+    """Waiters parked during the LOCKED window are queued for resumption with
+    the published record — one load serves the whole cohort."""
+    pool = make_pool()
+    pool.begin_load(3)
+    pool.add_waiter(3, "coroutine-A")
+    pool.add_waiter(3, "coroutine-B")
+    assert pool.lock_waits == 2
+    pool.check_invariants()
+    pool.finish_load(3, "rec3")
+    assert pool.coalesced_record_loads == 2
+    assert pool.take_resumes() == [("coroutine-A", "rec3"), ("coroutine-B", "rec3")]
+    assert pool.take_resumes() == []         # drained exactly once
+    pool.check_invariants()
+
+
+def test_duplicate_admit_during_locked_window_publishes_first():
+    """The record-level duplicate-admit race: a demand admit arriving while a
+    prefetch holds the slot LOCKED must publish that window and keep the
+    FIRST record — never two slots for one vid."""
+    pool = make_pool()
+    slot = pool.begin_load(5)                # prefetch opened the window
+    pool.add_waiter(5, "waiter")
+    assert pool.admit(5, "demand-rec") == slot
+    assert pool.lookup(5) == "demand-rec"    # demand arrived first: kept
+    assert pool.finish_load(5, "prefetch-rec") == slot
+    assert pool.lookup(5) == "demand-rec", "second publish must keep first"
+    assert [w for w, _ in pool.take_resumes()] == ["waiter"]
+    pool.check_invariants()
+
+
+def test_abort_load_frees_slot_and_wakes_waiters_empty():
+    pool = make_pool(n_slots=2)
+    pool.begin_load(7)
+    pool.add_waiter(7, "w0")
+    pool.abort_load(7)
+    assert pool.status(7) == "absent"
+    assert pool.take_resumes() == [("w0", None)]  # waiter re-issues the load
+    assert len(pool.free_list) == 2
+    pool.check_invariants()
+
+
+# ------------------------------------------------------------- group admits
+
+
+def test_admit_group_one_clock_interaction():
+    """A co-resident group lands in one call: all admitted, one group_admits
+    tick, resident vids skipped (keep first)."""
+    pool = make_pool(n_slots=8)
+    pool.admit(0, "kept")
+    n = pool.admit_group([0, 1, 2, 3], ["dup0", "g1", "g2", "g3"])
+    assert n == 3
+    assert pool.group_admits == 1
+    assert pool.lookup(0) == "kept"          # duplicate skipped, first kept
+    for vid in (1, 2, 3):
+        assert pool.lookup(vid) == f"g{vid}"
+    gids = {int(pool.slot_group[pool._slot_of(v)]) for v in (1, 2, 3)}
+    assert len(gids) == 1 and gids != {0}    # one shared non-zero group id
+    pool.check_invariants()
+
+
+def test_admit_group_under_pressure_never_touches_locked():
+    """A group larger than the evictable space behaves exactly like the
+    sequential admits it replaces (later members displace earlier ones via
+    the clock — the legacy-parity contract): no crash, LOCKED slots never
+    evicted, survivors bounded by the unpinned capacity."""
+    pool = make_pool(n_slots=4)
+    pool.begin_load(60)                      # one slot pinned by a load
+    pool.admit_group(list(range(6)), [f"g{v}" for v in range(6)])
+    assert pool.is_loading(60), "the in-flight load must keep its slot"
+    survivors = [v for v in range(6) if pool.status(v) == "present"]
+    assert len(survivors) == 3               # 4 slots - 1 LOCKED
+    pool.check_invariants()
+
+
+def test_admit_group_duplicate_vids_keep_first():
+    """In-batch duplicates must not double-allocate: one slot per vid, first
+    record kept, mapping array consistent (regression: a stale second slot
+    used to corrupt record_map when the clock evicted it)."""
+    pool = make_pool(n_slots=8)
+    n = pool.admit_group([5, 5, 6], ["first", "second", "g6"])
+    assert n == 2
+    assert pool.lookup(5) == "first"
+    assert pool.occupancy() == 2
+    pool.run_clock(target=pool.n_slots)      # evict everything
+    assert pool.status(5) == "absent" and pool.lookup(5) is None
+    pool.check_invariants()
+
+
+def test_admit_group_fully_locked_pool_drops_group():
+    pool = make_pool(n_slots=2)
+    pool.begin_load(60)
+    pool.begin_load(61)                      # pool fully pinned
+    n = pool.admit_group([1, 2], ["g1", "g2"])
+    assert n == 0
+    assert pool.group_admits == 0
+    assert pool.status(1) == "absent" and pool.status(2) == "absent"
+    pool.check_invariants()
+
+
+def test_admit_group_skips_locked_vids():
+    pool = make_pool(n_slots=8)
+    pool.begin_load(2)
+    n = pool.admit_group([1, 2, 3], ["g1", "racing", "g3"])
+    assert n == 2
+    assert pool.is_loading(2), "in-flight load must keep its window"
+    pool.check_invariants()
+
+
+def test_group_demote_ages_groups_together():
+    """With group_demote on, the clock hand demoting one member MARKs the
+    whole group, so co-placed groups age (and free) as a unit."""
+    vid_to_page = np.arange(64) // 4
+    pool = RecordBufferPool(8, vid_to_page, group_demote=True)
+    pool.admit_group([0, 1, 2], ["a", "b", "c"])
+    pool.admit(10, "solo")
+    pool.run_clock(target=0)                 # no-op
+    # force a full demote sweep: nothing freed yet, everything OCCUPIED
+    pool.run_clock(target=1)                 # demotes + evicts first MARKED
+    # whichever group member the hand touched first dragged the others down:
+    group_states = {int(pool.state[pool._slot_of(v)])
+                    for v in (0, 1, 2) if pool.is_resident(v)}
+    assert SlotState.OCCUPIED not in group_states
+
+
+# ------------------------------------------------------- clock accounting
+
+
+def test_clock_skips_counted_and_no_livelock():
+    """A sweep over an all-LOCKED pool must terminate after ONE revolution
+    (n_slots skips), not burn 3 * n_slots steps silently."""
+    pool = make_pool(n_slots=4)
+    for vid in range(4):
+        pool.begin_load(vid)
+    freed = pool.run_clock(target=1)
+    assert freed == 0
+    assert pool.clock_skips == 4, "each LOCKED step must be counted, once"
+    pool.check_invariants()
+
+
+def test_clock_skips_partial_locked():
+    """LOCKED slots mid-sweep are skipped (and counted) but do not stop the
+    hand from evicting the unlocked ones."""
+    pool = make_pool(n_slots=4)
+    pool.begin_load(50)
+    for vid in range(3):
         pool.admit(vid, f"r{vid}")
-    for s in range(n_slots):
-        if locked[s]:
-            pool.state[s] = SlotState.LOCKED
-    locked_vids = {int(pool.slot_vid[s]) for s in range(n_slots)
-                   if pool.state[s] == SlotState.LOCKED}
-    for vid in vids:
-        slot = pool.admit(vid, f"r{vid}")
-        if slot == -1:
-            assert all(pool.state == SlotState.LOCKED)
-            assert not pool.is_resident(vid)
-        else:
-            assert pool.lookup(vid) == f"r{vid}"
-        pool.check_invariants()
-    for v in locked_vids:  # in-flight loads must never have been evicted
-        assert pool.is_resident(v)
+    freed = pool.run_clock(target=3)
+    assert freed == 3
+    assert pool.clock_skips >= 1
+    assert pool.is_loading(50)
+    pool.check_invariants()
 
 
 def test_hit_rate_tracks_skew():

@@ -1,0 +1,236 @@
+"""Hypothesis property + stateful coverage of the Fig. 5 state machine.
+
+The `RuleBasedStateMachine` drives arbitrary interleavings of the pool's full
+public surface — lookup / begin_load / finish_load / abort_load / admit /
+admit_group / run_clock — the way racing search coroutines (across all
+workers sharing the one pool) would, and calls ``check_invariants()`` after
+every rule.  A lightweight model mirrors only what the clock cannot disturb:
+the set of open LOCKED windows (LOCKED slots are never evicted), the records
+published for each vid (lookup must return the FIRST admitted record or
+None — never a stale or foreign one), and waiter conservation
+(parked == resumed + still-waiting).
+
+Run in CI with a pinned seed and no deadline (see .github/workflows/ci.yml):
+
+    PYTHONPATH=src python -m pytest -q tests/test_bufferpool_stateful.py \
+        --hypothesis-seed=0
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.stateful import (
+    RuleBasedStateMachine,
+    initialize,
+    invariant,
+    rule,
+)
+
+from repro.core.bufferpool import RESIDENT_BIT, RecordBufferPool, SlotState
+
+N_RECORDS = 64
+VIDS = st.integers(min_value=0, max_value=N_RECORDS - 1)
+
+
+def make_pool(n_slots=8, n_records=N_RECORDS, **kw):
+    vid_to_page = np.arange(n_records) // 4
+    return RecordBufferPool(n_slots, vid_to_page, **kw)
+
+
+# ------------------------------------------------------------ property tests
+
+
+@given(
+    ops=st.lists(
+        st.tuples(st.sampled_from(["lookup", "admit", "clock"]),
+                  st.integers(min_value=0, max_value=63)),
+        min_size=1, max_size=300,
+    ),
+    n_slots=st.integers(min_value=1, max_value=16),
+)
+@settings(max_examples=100, deadline=None)
+def test_state_machine_invariants(ops, n_slots):
+    """Arbitrary op sequences never violate the Fig. 5 state machine."""
+    pool = make_pool(n_slots=n_slots)
+    for op, vid in ops:
+        if op == "lookup":
+            rec = pool.lookup(vid)
+            if rec is not None:
+                assert rec == f"r{vid}"
+        elif op == "admit":
+            if not pool.is_resident(vid):
+                pool.admit(vid, f"r{vid}")
+            slot = int(pool.record_map[vid] & ~RESIDENT_BIT)
+            assert pool.state[slot] in (SlotState.OCCUPIED, SlotState.MARKED)
+        else:
+            pool.run_clock(target=1 + vid % 3)
+        pool.check_invariants()
+
+
+@given(
+    n_slots=st.integers(min_value=1, max_value=8),
+    locked=st.lists(st.booleans(), min_size=8, max_size=8),
+    vids=st.lists(st.integers(min_value=8, max_value=63), min_size=1, max_size=20),
+)
+@settings(max_examples=100, deadline=None)
+def test_admit_under_locked_slots_never_crashes(n_slots, locked, vids):
+    """Admissions into a pool with an arbitrary subset of LOCKED slots (all
+    the way to fully locked) either succeed or return -1 — never crash, never
+    corrupt the state machine, never evict a LOCKED slot."""
+    pool = make_pool(n_slots=n_slots)
+    for s in range(n_slots):
+        if locked[s]:
+            assert pool.begin_load(s) >= 0    # open LOCKED window for vid s
+        else:
+            pool.admit(s, f"r{s}")
+    locked_vids = {s for s in range(n_slots) if locked[s]}
+    for vid in vids:
+        slot = pool.admit(vid, f"r{vid}")
+        if slot == -1:
+            assert all(pool.state == SlotState.LOCKED)
+            assert not pool.is_resident(vid)
+        else:
+            assert pool.lookup(vid) == f"r{vid}"
+        pool.check_invariants()
+    for v in locked_vids:  # in-flight loads must never have been evicted
+        assert pool.is_loading(v)
+
+
+# ------------------------------------------------------------ stateful suite
+
+
+class PoolMachine(RuleBasedStateMachine):
+    """Arbitrary interleavings of the async pool API (Fig. 5 + waiter lists)."""
+
+    @initialize(n_slots=st.integers(min_value=1, max_value=12),
+                group_demote=st.booleans())
+    def setup(self, n_slots, group_demote):
+        self.pool = make_pool(n_slots=n_slots, group_demote=group_demote)
+        self.loading: set[int] = set()       # open LOCKED windows, by vid
+        self.published: dict[int, str] = {}  # vid -> FIRST record ever kept
+        self.waiter_seq = 0
+        self.parked: set[str] = set()        # waiters not yet resumed
+        self.resumed: list[tuple[str, object]] = []
+
+    # ---- rules -----------------------------------------------------------
+
+    @rule(vid=VIDS)
+    def lookup(self, vid):
+        rec = self.pool.lookup(vid)
+        if rec is not None:
+            assert rec == self.published[vid], "lookup must serve FIRST record"
+        else:
+            # a miss is correct only if the record is absent, loading, or was
+            # evicted (published set only tracks what was once admitted)
+            assert self.pool.status(vid) in ("absent", "loading")
+
+    @rule(vid=VIDS)
+    def begin_load(self, vid):
+        st_before = self.pool.status(vid)
+        slot = self.pool.begin_load(vid)
+        if st_before != "absent":
+            assert slot == self.pool._slot_of(vid)  # no duplicate windows
+        elif slot >= 0:
+            self.loading.add(vid)
+        else:
+            assert self.pool.status(vid) == "absent"
+
+    @rule(vid=VIDS)
+    def finish_load(self, vid):
+        before = self.pool.status(vid)
+        rec = f"load-{vid}"
+        self.pool.finish_load(vid, rec)
+        if before == "loading":
+            self.loading.discard(vid)
+            self.published[vid] = rec
+        elif before == "absent" and self.pool.status(vid) == "present":
+            self.published[vid] = rec  # degraded to a plain admit
+        # before == "present": keep-first — published stays unchanged
+
+    @rule(vid=VIDS)
+    def abort_load(self, vid):
+        self.pool.abort_load(vid)
+        if vid in self.loading:
+            self.loading.discard(vid)
+            assert self.pool.status(vid) == "absent"
+
+    @rule(vid=VIDS)
+    def add_waiter(self, vid):
+        if not self.pool.is_loading(vid):
+            return
+        name = f"w{self.waiter_seq}"
+        self.waiter_seq += 1
+        self.pool.add_waiter(vid, name)
+        self.parked.add(name)
+
+    @rule(vid=VIDS)
+    def admit(self, vid):
+        before = self.pool.status(vid)
+        rec = f"admit-{vid}"
+        slot = self.pool.admit(vid, rec)
+        if before == "loading":
+            # demand admit publishes the open window (duplicate-admit race)
+            self.loading.discard(vid)
+            self.published[vid] = rec
+            assert slot >= 0
+        elif before == "absent" and slot >= 0:
+            self.published[vid] = rec
+        # before == "present": keep-first — published stays unchanged
+
+    @rule(vids=st.lists(VIDS, min_size=1, max_size=6))
+    def admit_group(self, vids):
+        # duplicates allowed on purpose: in-batch dups must keep-first, not
+        # double-allocate (regression: the mapping array corrupted otherwise)
+        before = {v: self.pool.status(v) for v in vids}
+        self.pool.admit_group(vids, [f"group-{v}" for v in vids])
+        for v in vids:
+            if before[v] == "loading":
+                assert self.pool.is_loading(v), "groups must skip LOCKED vids"
+            elif before[v] == "absent" and self.pool.status(v) == "present":
+                self.published[v] = f"group-{v}"
+
+    @rule(target_n=st.integers(min_value=0, max_value=6))
+    def run_clock(self, target_n):
+        self.pool.run_clock(target=target_n)
+
+    @rule()
+    def drain_resumes(self):
+        for waiter, rec in self.pool.take_resumes():
+            assert waiter in self.parked
+            self.parked.discard(waiter)
+            self.resumed.append((waiter, rec))
+
+    # ---- invariants (checked after EVERY rule) ---------------------------
+
+    @invariant()
+    def structural(self):
+        self.pool.check_invariants()
+
+    @invariant()
+    def locked_windows_match_model(self):
+        pool_loading = {v for v in range(N_RECORDS) if self.pool.is_loading(v)}
+        assert pool_loading == self.loading
+
+    @invariant()
+    def present_records_are_first_kept(self):
+        for v in range(N_RECORDS):
+            if self.pool.status(v) == "present":
+                slot = self.pool._slot_of(v)
+                assert self.pool.slots[slot] == self.published[v]
+
+    @invariant()
+    def waiters_conserved(self):
+        in_lists = sum(len(ws) for ws in self.pool.waiters.values())
+        in_queue = len(self.pool.pending_resumes)
+        assert self.pool.lock_waits == len(self.resumed) + in_lists + in_queue
+        # waiters only ever park on open windows
+        assert set(self.pool.waiters) <= self.loading
+
+
+TestPoolMachine = PoolMachine.TestCase
+TestPoolMachine.settings = settings(
+    max_examples=60, stateful_step_count=50, deadline=None
+)

@@ -1,0 +1,290 @@
+"""Shared record buffer pool: async LOCKED-window loads, record-level
+coalescing, and multi-worker determinism/parity (paper §3.2, Fig. 5).
+
+Contracts:
+
+  * ``SystemConfig.async_load=False`` is the legacy per-system pool (slots
+    admitted synchronously after the read, per record).  The async shared
+    pool must be *bitwise identical* to it at ``n_workers=1`` for every
+    algorithm in its deterministic configuration — velo without prefetch at
+    B=1 (stride prefetch and B>1 interleaving are schedule-sensitive for the
+    cache-aware pivot, the same exclusions tests/test_engine.py and
+    tests/test_fusion.py apply) — and recall-equivalent at
+    ``n_workers in {2, 4}`` for all five algorithms.
+  * A demand read arriving while a prefetch holds the record's slot LOCKED
+    must coalesce: ONE I/O charged, the first record kept, the demand
+    coroutine parked and resumed with the prefetcher's record.  (The page-
+    granularity version of this race lives in tests/test_fusion.py; these
+    tests pin the record-granularity LOCKED-window behavior.)
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.bufferpool import RecordBufferPool
+from repro.core.dataset import recall_at_k
+from repro.core.engine import run_workload
+from repro.core.search import ALGORITHMS, RecordAccessor, SearchParams
+from repro.core.sim import SSD, CostModel
+from repro.core.store import VeloIndex
+
+ALGOS = sorted(ALGORITHMS)  # diskann, inmemory, pipeann, starling, velo
+
+
+def _ids(results, k=10):
+    out = np.full((len(results), k), -1, dtype=np.int64)
+    for i, r in enumerate(results):
+        m = min(k, len(r.ids))
+        out[i, :m] = r.ids[:m]
+    return out
+
+
+def _run(algo, ds, graph, qb, *, async_load, n_workers=1, n_queries=40,
+         params=None, batch_size=None):
+    if params is None:
+        # velo's stride prefetch is the one schedule-sensitive piece at B=1;
+        # the bitwise contract therefore pins it off (cf. test_fusion.py)
+        params = SearchParams(L=32, W=4, prefetch=False)
+    cfg = baselines.SystemConfig(
+        buffer_ratio=0.2,
+        n_workers=n_workers,
+        batch_size=batch_size or 1,
+        async_load=async_load,
+        params=params,
+    )
+    sys_ = baselines.build_system(algo, ds.base, graph, qb, cfg)
+    results, stats = sys_.run(ds.queries[:n_queries])
+    return sys_, results, stats
+
+
+# --------------------------------------------------- determinism and parity
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_shared_pool_bitwise_identical_to_legacy(algo, small_ds, small_graph,
+                                                 small_qb):
+    """n_workers=1: the async shared pool returns bit-for-bit what the legacy
+    per-system pool returned — ids, distances, hops, and page reads."""
+    _, ref, _ = _run(algo, small_ds, small_graph, small_qb, async_load=False)
+    _, got, _ = _run(algo, small_ds, small_graph, small_qb, async_load=True)
+    for i, (r0, r1) in enumerate(zip(ref, got)):
+        np.testing.assert_array_equal(r0.ids, r1.ids, err_msg=f"{algo} q{i}: ids")
+        np.testing.assert_array_equal(r0.dists, r1.dists,
+                                      err_msg=f"{algo} q{i}: dists")
+        assert r0.hops == r1.hops, f"{algo} q{i}: hops"
+        assert r0.reads == r1.reads, f"{algo} q{i}: reads"
+
+
+@pytest.mark.parametrize("n_workers", [2, 4])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_shared_pool_multiworker_recall_parity(algo, n_workers, small_ds,
+                                               small_graph, small_qb):
+    """All five algorithms keep recall when n_workers coroutines share one
+    pool with LOCKED-window coalescing (vs the legacy admit path)."""
+    recalls = {}
+    for async_load in (False, True):
+        _, results, _ = _run(
+            algo, small_ds, small_graph, small_qb, async_load=async_load,
+            n_workers=n_workers, n_queries=len(small_ds.queries),
+            batch_size=4,
+            params=SearchParams(L=48, W=4),
+        )
+        recalls[async_load] = recall_at_k(
+            _ids(results), small_ds.groundtruth, 10
+        )
+    assert abs(recalls[True] - recalls[False]) < 0.05, (algo, recalls)
+
+
+def test_legacy_mode_never_parks():
+    """async_load=False must never touch the LOCKED-window machinery."""
+    ds_args = dict(n_workers=4, n_queries=40, batch_size=8,
+                   params=SearchParams(L=48, W=4))
+    import repro.core.dataset as dm
+    import repro.core.vamana as vam
+    from repro.core.quant import RabitQuantizer
+    ds = dm.make_dataset(n=800, d=32, n_queries=40, k=10, seed=3)
+    graph = vam.build_vamana(ds.base, R=12, L=24, batch_size=256, seed=3)
+    qb = RabitQuantizer(32, seed=3).fit_encode(ds.base)
+    _, _, stats = _run("velo", ds, graph, qb, async_load=False, **ds_args)
+    assert stats.lock_waits == 0
+    assert stats.coalesced_record_loads == 0
+    assert stats.group_admits == 0
+
+
+# ------------------------------------------- record-level coalescing races
+
+
+@pytest.fixture(scope="module")
+def velo_index(small_ds, small_graph, small_qb):
+    return VeloIndex(small_ds.base, small_graph, small_qb)
+
+
+def _fresh_accessor(velo_index, n_slots=64):
+    pool = RecordBufferPool(n_slots, velo_index.layout.vid_to_page)
+    return RecordAccessor(velo_index, pool, CostModel(), co_admit=False,
+                          async_load=True)
+
+
+def test_demand_coalesces_on_prefetch_locked_slot(velo_index):
+    """The duplicate-admit race at RECORD granularity: a demand get() racing
+    an in-flight prefetch of the same vid parks on the LOCKED slot — one I/O
+    charged, one decode, the prefetcher's (first) record kept and handed to
+    the demand coroutine."""
+    acc = _fresh_accessor(velo_index)
+    vid = 5
+
+    def co(qid, _q):
+        op = acc.prefetch_op(vid)
+        assert op is not None
+        assert acc.pool.is_loading(vid), "prefetch must open the LOCKED window"
+        assert acc.prefetch_op(vid) is None, "in-flight load must not resubmit"
+        yield op
+        rec = yield from acc.get(vid)  # LOCKED window still open: must park
+        return rec
+
+    results, stats = run_workload(
+        co, np.zeros((1, 2), np.float32), store=velo_index.store,
+        cost=CostModel(), ssd=SSD(), batch_size=1,
+    )
+    assert stats.io_count == 1, "demand must coalesce, not re-read the page"
+    assert stats.lock_waits == 1
+    assert stats.coalesced_record_loads == 1
+    assert acc.pool.status(vid) == "present"
+    # the record handed to the waiter IS the published (first) one
+    assert results[0] is acc.pool.lookup(vid)
+    assert results[0].vid == vid
+
+
+def test_cross_worker_demand_coalesces(velo_index):
+    """Coalescing spans workers: the pool is one instance, so a demand on
+    worker 1 parks on a LOCKED window opened by worker 0's prefetch and is
+    resumed by its completion."""
+    acc = _fresh_accessor(velo_index)
+    vid = 7
+
+    def co(qid, _q):
+        if qid == 0:  # worker 0: prefetch holds the window open
+            op = acc.prefetch_op(vid)
+            assert op is not None
+            yield op
+            yield ("compute", 500e-6)  # outlive the read
+            return None
+        # worker 1: demand read of the same record while it is in flight
+        yield ("compute", 1e-6)  # let worker 0 submit first
+        rec = yield from acc.get(vid)
+        return rec
+
+    results, stats = run_workload(
+        co, np.zeros((2, 2), np.float32), store=velo_index.store,
+        cost=CostModel(), ssd=SSD(), n_workers=2, batch_size=1,
+    )
+    assert stats.io_count == 1
+    assert stats.coalesced_record_loads == 1
+    assert results[1] is acc.pool.lookup(vid)
+
+
+def test_get_many_parks_on_foreign_loads(velo_index):
+    """get_many splits its vids into present/loading/missing and parks on the
+    loading ones AFTER publishing its own — no deadlock, every record real.
+    The holder keeps its LOCKED window open well past the reader's own page
+    read, so the reader genuinely parks instead of resolving inline."""
+    acc = _fresh_accessor(velo_index)
+    locked_vid, fresh_vid = 11, 12
+
+    def co(qid, _q):
+        if qid == 0:  # worker 0: slow loader holds the window open across
+            # three sequential (suspending) reads ~250us before publishing
+            assert acc.pool.begin_load(locked_vid) >= 0
+            page = None
+            for v in (locked_vid, 30, 50):
+                pages = yield ("read", [velo_index.page_of(v)])
+                if page is None:
+                    page = pages[velo_index.page_of(locked_vid)]
+            acc.pool.finish_load(
+                locked_vid, velo_index.decode_record(locked_vid, page)
+            )
+            return None
+        yield ("compute", 1e-6)  # let worker 0 open the window first
+        recs = yield from acc.get_many([locked_vid, fresh_vid])
+        return recs
+
+    results, stats = run_workload(
+        co, np.zeros((2, 2), np.float32), store=velo_index.store,
+        cost=CostModel(), ssd=SSD(), n_workers=2, batch_size=1,
+    )
+    recs = results[1]
+    assert recs[locked_vid].vid == locked_vid
+    assert recs[fresh_vid].vid == fresh_vid
+    assert stats.lock_waits == 1
+    assert stats.coalesced_record_loads == 1
+    assert recs[locked_vid] is acc.pool.lookup(locked_vid)
+
+
+def test_inline_load_wait_resolution_counts_one_miss(velo_index):
+    """A load_wait whose window closes during the searcher's own page read
+    resolves inline — it must NOT add a hit on top of the miss the searcher
+    already counted (one logical access, one stat)."""
+    acc = _fresh_accessor(velo_index)
+    locked_vid, fresh_vid = 11, 12
+
+    def co(qid, _q):
+        if qid == 0:  # prefetch completes while q1 is suspended on its read
+            op = acc.prefetch_op(locked_vid)
+            assert op is not None
+            yield op
+            return None
+        yield ("compute", 1e-6)
+        recs = yield from acc.get_many([locked_vid, fresh_vid])
+        return recs
+
+    results, stats = run_workload(
+        co, np.zeros((2, 2), np.float32), store=velo_index.store,
+        cost=CostModel(), ssd=SSD(), n_workers=2, batch_size=1,
+    )
+    assert results[1][locked_vid].vid == locked_vid
+    # q1's two classification lookups: both misses, and nothing else —
+    # the inline resolution must stay stat-free
+    assert acc.pool.misses == 2
+    assert acc.pool.hits == 0
+
+
+def test_exhausted_pool_still_serves_uncached(velo_index):
+    """Every slot pinned by an in-flight load: demand reads fall back to the
+    legacy uncached path (read + return, no admission) — never deadlock."""
+    pool = RecordBufferPool(2, velo_index.layout.vid_to_page)
+    acc = RecordAccessor(velo_index, pool, CostModel(), co_admit=False,
+                         async_load=True)
+    pool.begin_load(100)
+    pool.begin_load(101)  # pool fully LOCKED
+
+    def co(qid, _q):
+        rec = yield from acc.get(3)
+        return rec
+
+    results, _ = run_workload(
+        co, np.zeros((1, 2), np.float32), store=velo_index.store,
+        cost=CostModel(), ssd=SSD(), batch_size=1,
+    )
+    assert results[0].vid == 3
+    assert pool.status(3) == "absent"  # served, not cached
+    assert pool.is_loading(100) and pool.is_loading(101)
+
+
+# -------------------------------------------------- end-to-end pool pressure
+
+
+def test_velo_prefetch_coalesces_records(small_ds, small_graph, small_qb):
+    """The acceptance bar: a default velo run (prefetch + cbs) under a shared
+    pool must actually exercise record-level coalescing and group admits."""
+    cfg = baselines.SystemConfig(buffer_ratio=0.1, n_workers=4, batch_size=8)
+    sys_ = baselines.build_system("velo", small_ds.base, small_graph,
+                                  small_qb, cfg)
+    _, stats = sys_.run(small_ds.queries)
+    assert stats.coalesced_record_loads > 0, "prefetch+demand races must coalesce"
+    assert stats.lock_waits >= stats.coalesced_record_loads
+    assert stats.group_admits > 0, "co-resident groups must admit as groups"
+    assert stats.clock_skips >= 0
+    rec = recall_at_k(_ids(sys_.run(small_ds.queries)[0]),
+                      small_ds.groundtruth, 10)
+    assert rec > 0.6
