@@ -1,29 +1,42 @@
-"""Cross-query fused dispatch: B x fuse-budget sweep.
+"""Cross-query fused dispatch: B x fuse-budget sweep + rendezvous topology.
 
-The engine's rendezvous buffer collects the ("score", ...) ops of all
-coroutines in flight on a worker and flushes them as one fused DistanceEngine
-call.  This module measures how the fused-batch size and the total number of
-distance dispatches scale with the coroutine batch B and the flush row budget,
-against the per-query dispatch baseline (fuse off).
+The engine's rendezvous buffer collects the ("score", ...) ops of in-flight
+coroutines and flushes them as one fused DistanceEngine call.  This module
+measures how the fused-batch size and the total number of distance dispatches
+scale with the coroutine batch B and the flush row budget, against the
+per-query dispatch baseline (fuse off) — and compares the two rendezvous
+topologies at multiple workers: per-worker buffers (each flushes when ITS
+worker stalls) versus the system-wide shared rendezvous (one buffer, flushed
+at the row budget or when EVERY worker is stalled, so the fused batch spans
+the whole system).
 
 Claims checked: fusion cuts total dispatches (the launch-bound -> dispatch-
-bound argument); the fused batch grows with B; recall is unaffected.
+bound argument); the fused batch grows with B; recall is unaffected; the
+shared rendezvous at 4 workers issues fewer dispatches than per-worker
+fusion at equal recall.
+
+Standalone:  python -m benchmarks.bench_fusion [--full] [--strict]
+(--strict exits non-zero when any claim check fails, same contract as
+benchmarks/run.py --strict.)
 """
 
 from __future__ import annotations
+
+import argparse
 
 from benchmarks import common
 from repro.core import baselines
 from repro.core.dataset import recall_at_k
 
 
-def _run(w, B, fuse, fuse_rows=256):
+def _run(w, B, fuse, fuse_rows=256, n_workers=2, shared=False):
     cfg = baselines.SystemConfig(
         buffer_ratio=0.2,
         batch_size=B,
-        n_workers=2,
+        n_workers=n_workers,
         fuse=fuse,
         fuse_rows=fuse_rows,
+        shared_rendezvous=shared,
         params=baselines.SearchParams(L=48, W=4),
     )
     sys_ = baselines.build_system("velo", w.ds.base, w.graph, w.qb, cfg)
@@ -32,10 +45,13 @@ def _run(w, B, fuse, fuse_rows=256):
         "B": B,
         "fuse": fuse,
         "fuse_rows": fuse_rows if fuse else 0,
+        "n_workers": n_workers,
+        "shared": shared,
         "recall": recall_at_k(common.result_ids(results), w.ds.groundtruth, 10),
         "qps": stats.qps,
         "dist_dispatches": sys_.ctx.dist.stats.dispatches(),
         "fused_dispatches": sys_.ctx.dist.stats.fused_calls,
+        "dist_uploads": sys_.ctx.dist.stats.uploads,
         "requests_per_flush": stats.requests_per_flush,
         "rows_per_flush": stats.rows_per_flush,
     }
@@ -52,15 +68,25 @@ def run(quick: bool = True) -> dict:
         for rows in budgets:
             points.append(_run(w, B, fuse=True, fuse_rows=rows))
 
+    # rendezvous topology at 4 workers: per-worker vs system-wide shared
+    bmax = Bs[-1]
+    topo = {
+        "per_worker": _run(w, bmax, fuse=True, fuse_rows=budgets[-1],
+                           n_workers=4),
+        "shared": _run(w, bmax, fuse=True, fuse_rows=budgets[-1],
+                       n_workers=4, shared=True),
+    }
+
     table_rows = [
         [p["B"], "on" if p["fuse"] else "off", p["fuse_rows"] or "-",
+         p["n_workers"], "shared" if p["shared"] else "worker",
          f"{p['recall']:.3f}", f"{p['qps']:.0f}", p["dist_dispatches"],
          f"{p['requests_per_flush']:.2f}", f"{p['rows_per_flush']:.1f}"]
-        for p in points
+        for p in points + list(topo.values())
     ]
     text = common.fmt_table(
-        ["B", "fuse", "budget", "recall@10", "QPS", "dispatches",
-         "req/flush", "rows/flush"],
+        ["B", "fuse", "budget", "workers", "rendezvous", "recall@10", "QPS",
+         "dispatches", "req/flush", "rows/flush"],
         table_rows,
     )
 
@@ -72,10 +98,10 @@ def run(quick: bool = True) -> dict:
                 return p
         raise KeyError((B, fuse, rows))
 
-    bmax = Bs[-1]
     base = pick(bmax, False)
     fused = pick(bmax, True, budgets[-1])
     small = pick(bmax, True, budgets[0])
+    pw, sh = topo["per_worker"], topo["shared"]
     checks = {
         # the point of the plane: fewer kernel dispatches at the same work
         "fused_cuts_dispatches": fused["dist_dispatches"] < 0.7 * base["dist_dispatches"],
@@ -89,12 +115,45 @@ def run(quick: bool = True) -> dict:
         "recall_parity": abs(fused["recall"] - base["recall"]) < 0.05,
         # amortized dispatches must not cost simulated throughput
         "qps_no_worse": fused["qps"] > 0.95 * base["qps"],
+        # the shared rendezvous spans workers: fewer, wider dispatches at
+        # 4 workers than per-worker buffers, at equal recall
+        "shared_fewer_dispatches": sh["dist_dispatches"] < pw["dist_dispatches"],
+        "shared_wider_flushes": sh["requests_per_flush"] > pw["requests_per_flush"],
+        "shared_recall_parity": abs(sh["recall"] - pw["recall"]) < 0.05,
+        # register-once tables: a whole run uploads O(1) tables, not O(hops)
+        "uploads_o1": sh["dist_uploads"] <= 2,
     }
     dispatch_cut = base["dist_dispatches"] / max(fused["dist_dispatches"], 1)
     return {
         "name": "fusion_sweep",
         "points": points,
+        "topology_4workers": topo,
         "dispatch_cut_at_max_B": dispatch_cut,
+        "shared_dispatch_cut": pw["dist_dispatches"] / max(sh["dist_dispatches"], 1),
         "text": text,
         "checks": checks,
     }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="quick profile (the default; kept explicit for CI)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any claim check fails")
+    args = ap.parse_args()
+    res = run(quick=not args.full)
+    print(res["text"])
+    ok = True
+    for check, passed in res["checks"].items():
+        ok &= bool(passed)
+        print(f"  [{'PASS' if passed else 'FAIL'}] {check}")
+    print(f"dispatch cut at max B: {res['dispatch_cut_at_max_B']:.2f}x; "
+          f"shared vs per-worker: {res['shared_dispatch_cut']:.2f}x")
+    if args.strict and not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

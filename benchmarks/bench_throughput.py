@@ -38,6 +38,10 @@ def run(quick: bool = True) -> dict:
                  # distance-plane dispatch accounting (--fuse comparison axis)
                  "dist_dispatches": sys_.ctx.dist.stats.dispatches(),
                  "fused_dispatches": sys_.ctx.dist.stats.fused_calls,
+                 # register-once resident tables: uploads must stay O(1) per
+                 # index (the legacy pallas path paid one per dispatch)
+                 "dist_uploads": sys_.ctx.dist.stats.uploads,
+                 "resident_gathers": sys_.ctx.dist.stats.resident_gathers,
                  "score_requests_per_flush": stats.requests_per_flush,
                  "score_rows_per_flush": stats.rows_per_flush}
             )
@@ -61,6 +65,11 @@ def run(quick: bool = True) -> dict:
     p = curves["pipeann"][mid]
     m = curves["inmemory"][mid]
     checks = {
+        # the resident code plane registers each index's tables once —
+        # quantized systems must not re-upload per hop (uploads O(1))
+        "uploads_o1_per_index": all(
+            p["dist_uploads"] <= 1 for pts in curves.values() for p in pts
+        ),
         "velo_qps_beats_diskann": v["qps"] > d["qps"],
         "velo_qps_beats_starling": v["qps"] > s["qps"],
         "velo_qps_beats_pipeann": v["qps"] > p["qps"],

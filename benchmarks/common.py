@@ -33,16 +33,43 @@ def active_backend() -> str:
     return distance_mod.resolved_backend()
 
 
-def set_fuse(on: bool, rows: int | None = None) -> None:
+def set_fuse(on: bool, rows: int | None = None,
+             shared: bool | None = None) -> None:
     """Enable cross-query fused score dispatch for every system the
-    benchmarks build (threads run.py's --fuse flag through SystemConfig)."""
-    baselines_mod.set_default_fuse(on, rows)
+    benchmarks build (threads run.py's --fuse / --shared-rendezvous flags
+    through SystemConfig)."""
+    baselines_mod.set_default_fuse(on, rows, shared)
 
 
 def fuse_active() -> dict:
     """The fuse settings systems will actually get, for results.json."""
     on, rows = baselines_mod.default_fuse()
-    return {"enabled": on, "rows": rows}
+    return {"enabled": on, "rows": rows,
+            "shared_rendezvous": baselines_mod.default_shared_rendezvous()}
+
+
+def set_calibration(path: str) -> None:
+    """Load calibrate.py's per-backend CostModel overrides and make every
+    system the benchmarks build inherit them (run.py's --calibration flag)."""
+    baselines_mod.set_default_calibration(baselines_mod.load_calibration(path))
+
+
+_PALLAS_MODE_CACHE: dict[str, bool] = {}
+
+
+def pallas_mode() -> bool | None:
+    """Whether the pallas backend would run the kernels in interpret mode
+    (True) or compiled (False); None when the active backend isn't pallas.
+    Recorded in results.json so runs on real accelerators are
+    distinguishable from CPU interpret-mode runs.  Cached: the probe builds
+    an engine, and the answer cannot change within a process."""
+    if active_backend() != "pallas":
+        return None
+    if "interpret" not in _PALLAS_MODE_CACHE:
+        _PALLAS_MODE_CACHE["interpret"] = bool(
+            distance_mod.get_engine("pallas").interpret
+        )
+    return _PALLAS_MODE_CACHE["interpret"]
 
 
 class Workload:

@@ -1,7 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 
   python -m benchmarks.run [--quick | --full] [--only NAME] [--backend NAME]
-                           [--fuse] [--fuse-rows N] [--strict]
+                           [--fuse] [--fuse-rows N] [--shared-rendezvous]
+                           [--calibration PATH] [--strict]
 
 Writes benchmarks/out/results.json and prints each table with the paper
 claims it validates.  --strict exits non-zero when any module errors or any
@@ -57,6 +58,13 @@ def main():
                     help="cross-query fused score dispatch for all systems")
     ap.add_argument("--fuse-rows", type=int, default=None,
                     help="rendezvous flush row budget (default 256)")
+    ap.add_argument("--shared-rendezvous", action="store_true",
+                    help="one system-wide rendezvous buffer spanning all "
+                         "workers (implies --fuse)")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="per-backend CostModel overrides from "
+                         "benchmarks/calibrate.py (benchmarks/out/"
+                         "calibration.json)")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 if any module errors or any check fails")
     args = ap.parse_args()
@@ -65,8 +73,11 @@ def main():
     quick = not args.full
     if args.backend:
         common.set_backend(args.backend)
-    if args.fuse or args.fuse_rows is not None:
-        common.set_fuse(args.fuse, args.fuse_rows)
+    if args.fuse or args.fuse_rows is not None or args.shared_rendezvous:
+        common.set_fuse(args.fuse or args.shared_rendezvous, args.fuse_rows,
+                        shared=args.shared_rendezvous or None)
+    if args.calibration:
+        common.set_calibration(args.calibration)
     print(f"distance backend: {common.active_backend()}  fuse: {common.fuse_active()}")
 
     os.makedirs(common.OUT_DIR, exist_ok=True)
@@ -85,7 +96,10 @@ def main():
         dt = time.time() - t0
         res["wall_clock_s"] = dt
         res["distance_backend"] = common.active_backend()
+        # interpret vs compiled matters for pallas wall-clock comparisons
+        res["pallas_interpret"] = common.pallas_mode()
         res["fuse"] = common.fuse_active()
+        res["calibration"] = args.calibration
         results[modname] = res
         print(f"\n=== {res.get('name', modname)}  ({dt:.1f}s) ===")
         if "error" in res:

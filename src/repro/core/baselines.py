@@ -45,20 +45,63 @@ from repro.core.vamana import VamanaGraph
 
 _DEFAULT_FUSE = False
 _DEFAULT_FUSE_ROWS = 256
+_DEFAULT_SHARED_RV = False
+_DEFAULT_CALIBRATION: dict | None = None
 
 
-def set_default_fuse(on: bool, rows: int | None = None) -> None:
+def set_default_fuse(
+    on: bool, rows: int | None = None, shared: bool | None = None
+) -> None:
     """Process-wide default for cross-query fused score dispatch — the hook
     ``benchmarks/run.py --fuse`` threads through (mirrors
-    ``distance.set_default_backend``)."""
-    global _DEFAULT_FUSE, _DEFAULT_FUSE_ROWS
+    ``distance.set_default_backend``).  ``shared`` flips the rendezvous
+    topology every system inherits (one system-wide buffer vs per-worker)."""
+    global _DEFAULT_FUSE, _DEFAULT_FUSE_ROWS, _DEFAULT_SHARED_RV
     _DEFAULT_FUSE = bool(on)
     if rows is not None:
         _DEFAULT_FUSE_ROWS = int(rows)
+    if shared is not None:
+        _DEFAULT_SHARED_RV = bool(shared)
 
 
 def default_fuse() -> tuple[bool, int]:
     return _DEFAULT_FUSE, _DEFAULT_FUSE_ROWS
+
+
+def default_shared_rendezvous() -> bool:
+    return _DEFAULT_SHARED_RV
+
+
+def set_default_calibration(calib: dict | None) -> None:
+    """Process-wide per-backend CostModel overrides, as emitted by
+    ``benchmarks/calibrate.py`` ({backend: {cost_field: seconds}}).  Systems
+    built with ``SystemConfig.calibration=None`` inherit it."""
+    global _DEFAULT_CALIBRATION
+    _DEFAULT_CALIBRATION = calib
+
+
+def load_calibration(source) -> dict | None:
+    """Normalize a calibration source: a dict passes through, a str/Path is
+    read as the JSON file calibrate.py writes, None returns None."""
+    if source is None or isinstance(source, dict):
+        return source
+    import json
+
+    with open(source) as f:
+        return json.load(f)
+
+
+def apply_calibration(cost: CostModel, backend: str, calib: dict | None) -> CostModel:
+    """A CostModel with ``calib[backend]``'s measured per-backend constants
+    (dispatch / table-upload seconds) replacing the defaults.  Unknown keys
+    are ignored so calibration files can carry extra diagnostics."""
+    overrides = (calib or {}).get(backend)
+    if not overrides:
+        return cost
+    fields = {f.name for f in dataclasses.fields(CostModel)}
+    return dataclasses.replace(
+        cost, **{k: float(v) for k, v in overrides.items() if k in fields}
+    )
 
 
 @dataclasses.dataclass
@@ -81,6 +124,15 @@ class SystemConfig:
     distance_backend: str = "default"  # scalar | batch | pallas | auto | default
     fuse: bool | None = None      # cross-query fused dispatch (None -> process default)
     fuse_rows: int | None = None  # rendezvous flush row budget (None -> default)
+    shared_rendezvous: bool | None = None  # one system-wide rendezvous buffer
+                                  # spanning all workers (None -> process
+                                  # default; off = per-worker PR-2 semantics)
+    resident_plane: bool = True   # register-once resident tables + id-based
+                                  # refine requests (False = host-gather PR-2
+                                  # semantics: per-call row materialization)
+    calibration: dict | str | None = None  # per-backend CostModel overrides
+                                  # ({backend: {field: s}} or a path to
+                                  # calibrate.py's JSON; None -> process default)
 
 
 @dataclasses.dataclass
@@ -120,6 +172,7 @@ class System:
             qb=self.ctx.qb,
             fuse=self.config.fuse,
             fuse_rows=self.config.fuse_rows,
+            shared_rendezvous=bool(self.config.shared_rendezvous),
         )
         hits, misses = self.ctx.accessor.stats()
         stats.cache_hits = hits
@@ -175,8 +228,23 @@ def build_system(
         name=name,
         fuse=fuse_on if config.fuse is None else config.fuse,
         fuse_rows=fuse_rows if config.fuse_rows is None else config.fuse_rows,
+        shared_rendezvous=(
+            default_shared_rendezvous()
+            if config.shared_rendezvous is None else config.shared_rendezvous
+        ),
     )
     cost = cost or CostModel()
+    # ONE engine per system (it also answers which backend actually resolved
+    # — pallas may degrade to batch — for the calibration lookup)
+    dist_engine = distance_mod.get_engine(
+        config.distance_backend, resident=config.resident_plane
+    )
+    calib = load_calibration(
+        config.calibration if config.calibration is not None
+        else _DEFAULT_CALIBRATION
+    )
+    if calib:
+        cost = apply_calibration(cost, dist_engine.name, calib)
     n, dim = base.shape
 
     def record_pool_for(index) -> RecordAccessor:
@@ -273,7 +341,8 @@ def build_system(
         medoid=graph.medoid,
         base=base if name == "inmemory" else None,
         refine_cost_s=refine,
-        dist=distance_mod.get_engine(config.distance_backend),
+        dist=dist_engine,
+        resident_ids=config.resident_plane,
     )
     return System(
         name=name,
@@ -303,6 +372,8 @@ def evaluate(
         "system": system.name,
         "distance_backend": system.ctx.dist.name,
         "fuse": bool(system.config.fuse),
+        "shared_rendezvous": bool(system.config.shared_rendezvous),
+        "resident_plane": bool(system.config.resident_plane),
         "recall@k": rec,
         "qps": stats.qps,
         "mean_latency_ms": stats.mean_latency_ms,
@@ -318,6 +389,8 @@ def evaluate(
         "memory_bytes": system.memory_bytes(),
         "mean_hops": float(np.mean([r.hops for r in results])),
         "dist_dispatches": system.ctx.dist.stats.dispatches(),
+        "dist_uploads": system.ctx.dist.stats.uploads,
+        "resident_gathers": system.ctx.dist.stats.resident_gathers,
         "score_requests_per_flush": stats.requests_per_flush,
         "score_rows_per_flush": stats.rows_per_flush,
     }

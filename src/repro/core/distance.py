@@ -21,6 +21,22 @@ Selection:
 ``set_default_backend`` — the hook benchmarks/run.py's ``--backend`` flag
 threads through without touching every call site.
 
+Resident code plane (register-once tables):
+
+Engines no longer consume caller-gathered code matrices on the hot path.
+``register_index(qb)`` pins an index's resident tables ONCE per engine —
+contiguous host views (``quant.ResidentView``) for the NumPy backends, device
+arrays via ``jax.device_put`` for the Pallas backend (the
+``velo.index.DeviceIndex`` pattern) — and every id-based request gathers from
+the registered table: on-device inside the jitted kernel wrappers for
+``pallas``, one fancy-index per table for the host backends.  Registration is
+lazy (first id-based call registers) and idempotent; ``DistanceStats.uploads``
+counts table uploads so benchmarks can assert they are O(1) per index rather
+than O(hops).  The matrix-consuming entry points (``refine`` over payload
+rows, the ``*_many`` matrix hooks) remain for the host-gather parity path and
+for ext_bits=8 records — on the Pallas backend each such call re-uploads its
+gathered rows and is counted as an upload.
+
 All engines consume the same packed artifact formats produced by
 ``RabitQuantizer.fit_encode`` (bit-packed level-1 codes, nibble-packed level-2
 codes), so the host plane, the simulator, and the device kernels share one
@@ -35,7 +51,13 @@ import warnings
 
 import numpy as np
 
-from repro.core.quant import PreparedQuery, QuantizedBase, RabitQuantizer, unpack_bits
+from repro.core.quant import (
+    PreparedQuery,
+    QuantizedBase,
+    RabitQuantizer,
+    ResidentView,
+    unpack_bits,
+)
 
 BACKENDS = ("scalar", "batch", "pallas")
 
@@ -82,6 +104,11 @@ class DistanceStats:
     # cross-query fusion: dispatches that served >1 query's rows at once
     fused_calls: int = 0
     fused_queries: int = 0
+    # resident code plane: table uploads (register_index, plus one per
+    # gathered-row kernel call on the non-resident pallas path) and rows
+    # gathered from registered tables instead of caller-materialized matrices
+    uploads: int = 0
+    resident_gathers: int = 0
 
     def dispatches(self) -> int:
         """Total kernel/ufunc dispatches issued by this engine instance."""
@@ -96,14 +123,18 @@ class DistanceStats:
 @dataclasses.dataclass
 class ScoreRequest:
     """One coroutine's distance work, yielded to the engine as a ("score", req)
-    op.  The engine collects requests from all ready coroutines on a worker
-    into a rendezvous buffer and executes them as ONE fused DistanceEngine
-    call per kind (see ``execute_requests``), resuming each coroutine with its
-    slice of the results.
+    op.  The engine collects requests from all ready coroutines — on one
+    worker, or system-wide with the shared rendezvous — into a rendezvous
+    buffer and executes them as ONE fused DistanceEngine call per kind (see
+    ``execute_requests``), resuming each coroutine with its slice of the
+    results.
 
     kinds:
       "estimate" — level-1 binary estimates; payload = vertex-id array
-      "refine"   — level-2 extended-code refinement; payload = (codes, lo, step)
+                   (rows resolved against the engine's registered tables)
+      "refine"   — level-2 extended-code refinement; payload = vertex-id
+                   array (resident path, the default), or a materialized
+                   (codes, lo, step) tuple (host-gather parity path)
       "full"     — exact fp32 distances; payload = (m, d) vector matrix
     ``flop_s`` is the per-row arithmetic cost in simulated seconds (WITHOUT the
     dispatch overhead — the engine charges one amortized dispatch per flush).
@@ -118,13 +149,37 @@ class ScoreRequest:
 
 
 class DistanceEngine:
-    """Base class: counters + empty-batch handling; subclasses implement the
-    three kernels over packed matrices."""
+    """Base class: counters + empty-batch handling + the register-once table
+    registry; subclasses implement the kernels over registered tables and
+    packed matrices."""
 
     name = "abstract"
 
-    def __init__(self):
+    def __init__(self, resident: bool = True):
         self.stats = DistanceStats()
+        # resident=False keeps PR-2 semantics on the pallas path: rows are
+        # gathered on the host and re-uploaded per call (the "before" point
+        # the uploads counter quantifies).  Host backends gather from the
+        # registered views either way — results are bitwise identical.
+        self.resident = resident
+        self._tables: dict[int, object] = {}
+
+    # ---- register-once resident tables -------------------------------------
+    def register_index(self, qb: QuantizedBase):
+        """Pin ``qb``'s resident tables on this engine (idempotent).  Returns
+        the table handle; the first registration counts one upload."""
+        tbl = self._tables.get(id(qb))
+        if tbl is None:
+            tbl = self._build_table(qb)
+            self._tables[id(qb)] = tbl
+            self.stats.uploads += 1
+        return tbl
+
+    def is_registered(self, qb: QuantizedBase) -> bool:
+        return id(qb) in self._tables
+
+    def _build_table(self, qb: QuantizedBase):
+        return ResidentView.from_qb(qb)
 
     # ---- level 1: binary estimate ------------------------------------------
     def estimate(
@@ -134,13 +189,27 @@ class DistanceEngine:
         ids = np.asarray(ids, dtype=np.int64)
         if ids.size == 0:
             return np.empty(0, dtype=np.float32)
+        tbl = self.register_index(qb)
         self.stats.level1_calls += 1
         self.stats.level1_rows += ids.size
-        return self._estimate(
-            qb, pq, qb.binary_codes[ids], qb.norms[ids], qb.ip_bar[ids]
-        )
+        self.stats.resident_gathers += ids.size
+        return self._estimate_ids(qb, tbl, pq, ids)
 
     # ---- level 2: extended-code refinement ---------------------------------
+    def refine_ids(
+        self, qb: QuantizedBase, pq: PreparedQuery, ids: np.ndarray
+    ) -> np.ndarray:
+        """Level-2 refined squared distances for vertex ids, served from the
+        registered extended-code table (resident path)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size == 0:
+            return np.empty(0, dtype=np.float32)
+        tbl = self.register_index(qb)
+        self.stats.level2_calls += 1
+        self.stats.level2_rows += ids.size
+        self.stats.resident_gathers += ids.size
+        return self._refine_ids(qb, tbl, pq, ids)
+
     def refine(
         self,
         qb: QuantizedBase,
@@ -149,7 +218,8 @@ class DistanceEngine:
         lo: np.ndarray,
         step: np.ndarray,
     ) -> np.ndarray:
-        """Level-2 refined squared distances from packed extended codes."""
+        """Level-2 refined squared distances from packed extended codes
+        (host-gather path: the caller materialized the rows)."""
         if codes.shape[0] == 0:
             return np.empty(0, dtype=np.float32)
         self.stats.level2_calls += 1
@@ -191,19 +261,51 @@ class DistanceEngine:
             i, pq, ids = live[0]
             outs[i] = self.estimate(qb, pq, ids)
             return outs
+        tbl = self.register_index(qb)
         sizes = [ids.size for _, _, ids in live]
         all_ids = np.concatenate([ids for _, _, ids in live])
         self.stats.level1_calls += 1
         self.stats.level1_rows += all_ids.size
+        self.stats.resident_gathers += all_ids.size
         self.stats.fused_calls += 1
         self.stats.fused_queries += len(live)
-        res = self._estimate_many(
-            qb,
-            [pq for _, pq, _ in live],
-            sizes,
-            qb.binary_codes[all_ids],
-            qb.norms[all_ids],
-            qb.ip_bar[all_ids],
+        res = self._estimate_ids_many(
+            qb, tbl, [pq for _, pq, _ in live], sizes, all_ids
+        )
+        off = 0
+        for (i, _, _), m in zip(live, sizes):
+            outs[i] = np.asarray(res[off : off + m], dtype=np.float32)
+            off += m
+        return outs
+
+    def refine_ids_many(
+        self, qb: QuantizedBase, groups: list[tuple[PreparedQuery, np.ndarray]]
+    ) -> list[np.ndarray]:
+        """Fused id-based level-2 refinement: ``groups`` is (pq, ids)."""
+        outs: list = [None] * len(groups)
+        live: list[tuple[int, PreparedQuery, np.ndarray]] = []
+        for i, (pq, ids) in enumerate(groups):
+            ids = np.asarray(ids, dtype=np.int64)
+            if ids.size == 0:
+                outs[i] = np.empty(0, dtype=np.float32)
+            else:
+                live.append((i, pq, ids))
+        if not live:
+            return outs
+        if len(live) == 1:
+            i, pq, ids = live[0]
+            outs[i] = self.refine_ids(qb, pq, ids)
+            return outs
+        tbl = self.register_index(qb)
+        sizes = [ids.size for _, _, ids in live]
+        all_ids = np.concatenate([ids for _, _, ids in live])
+        self.stats.level2_calls += 1
+        self.stats.level2_rows += all_ids.size
+        self.stats.resident_gathers += all_ids.size
+        self.stats.fused_calls += 1
+        self.stats.fused_queries += len(live)
+        res = self._refine_ids_many(
+            qb, tbl, [pq for _, pq, _ in live], sizes, all_ids
         )
         off = 0
         for (i, _, _), m in zip(live, sizes):
@@ -216,7 +318,8 @@ class DistanceEngine:
         qb: QuantizedBase,
         groups: list[tuple[PreparedQuery, np.ndarray, np.ndarray, np.ndarray]],
     ) -> list[np.ndarray]:
-        """Fused level-2 refinement: ``groups`` is (pq, codes, lo, step)."""
+        """Fused level-2 refinement over materialized rows: ``groups`` is
+        (pq, codes, lo, step) — the host-gather parity path."""
         outs: list = [None] * len(groups)
         live = []
         for i, g in enumerate(groups):
@@ -275,6 +378,27 @@ class DistanceEngine:
             outs[i] = np.asarray(res[off : off + m], dtype=np.float32)
             off += m
         return outs
+
+    # ---- id-based hooks over registered tables -----------------------------
+    # Defaults gather the rows from the registered host view and delegate to
+    # the matrix hooks — bitwise identical to a caller-side gather.  The
+    # pallas backend overrides them to gather on-device instead.
+
+    def _estimate_ids(self, qb, tbl: ResidentView, pq, ids) -> np.ndarray:
+        codes, norms, ip_bar = tbl.gather_level1(ids)
+        return self._estimate(qb, pq, codes, norms, ip_bar)
+
+    def _refine_ids(self, qb, tbl: ResidentView, pq, ids) -> np.ndarray:
+        codes, lo, step = tbl.gather_level2(ids)
+        return self._refine(qb, pq, codes, lo, step)
+
+    def _estimate_ids_many(self, qb, tbl: ResidentView, pqs, sizes, ids) -> np.ndarray:
+        codes, norms, ip_bar = tbl.gather_level1(ids)
+        return self._estimate_many(qb, pqs, sizes, codes, norms, ip_bar)
+
+    def _refine_ids_many(self, qb, tbl: ResidentView, pqs, sizes, ids) -> np.ndarray:
+        codes, lo, step = tbl.gather_level2(ids)
+        return self._refine_many(qb, pqs, sizes, codes, lo, step)
 
     # ---- subclass hooks ----------------------------------------------------
     def _estimate(self, qb, pq, codes, norms, ip_bar) -> np.ndarray:
@@ -398,19 +522,83 @@ class BatchEngine(DistanceEngine):
         return np.einsum("ij,ij->i", diff, diff).astype(np.float32, copy=False)
 
 
+# Jitted device-gather wrappers for the resident pallas path, built once per
+# process (NOT per engine instance — a per-instance closure would defeat the
+# jit cache and recompile for every system the benchmarks build).
+_PALLAS_RESIDENT_FNS = None
+
+
+def _pallas_resident_fns():
+    global _PALLAS_RESIDENT_FNS
+    if _PALLAS_RESIDENT_FNS is None:
+        import functools
+
+        import jax
+
+        from repro.kernels.binary_ip import estimate_dist2 as _binary_est
+        from repro.kernels.int4_dist import int4_dist2 as _int4_dist2
+
+        @functools.partial(jax.jit, static_argnames=("interpret",))
+        def gather_estimate(q, codes, norms, ip_bar, ids, interpret):
+            # the gather happens where the table lives: on the device
+            return _binary_est(
+                q, codes[ids], norms[ids], ip_bar[ids], interpret=interpret
+            )
+
+        @functools.partial(jax.jit, static_argnames=("interpret",))
+        def gather_refine(q, codes, lo, step, ids, interpret):
+            return _int4_dist2(
+                q, codes[ids], lo[ids], step[ids], interpret=interpret
+            )
+
+        _PALLAS_RESIDENT_FNS = (gather_estimate, gather_refine)
+    return _PALLAS_RESIDENT_FNS
+
+
+class _DeviceTable:
+    """Register-once device residency for one index: the level-1/level-2
+    tables as device arrays (uploaded once via ``jax.device_put``), plus the
+    host view for the fallback paths (ext_bits=8, non-resident mode)."""
+
+    __slots__ = ("host", "binary_codes", "norms", "ip_bar",
+                 "ext_codes", "ext_lo", "ext_step")
+
+    def __init__(self, qb: QuantizedBase):
+        import jax
+
+        self.host = ResidentView.from_qb(qb)
+        put = jax.device_put
+        self.binary_codes = put(self.host.binary_codes)
+        self.norms = put(self.host.norms)
+        self.ip_bar = put(self.host.ip_bar)
+        self.ext_codes = put(self.host.ext_codes)
+        self.ext_lo = put(self.host.ext_lo)
+        self.ext_step = put(self.host.ext_step)
+
+    def gather_level1(self, ids):
+        return self.host.gather_level1(ids)
+
+    def gather_level2(self, ids):
+        return self.host.gather_level2(ids)
+
+
 class PallasEngine(BatchEngine):
     """JAX/Pallas kernels for both quantized levels.
 
-    Row counts are padded up to multiples of ``bucket`` so the jitted kernel
-    wrappers see a small set of static shapes (bounded recompiles) — the
-    frontier size varies every hop.  The exact-fp32 path and the 8-bit
-    extended codes (no int4 kernel applies) stay on the NumPy batch path.
+    ``register_index`` pins the code tables as device arrays once per index;
+    id-based requests ship only the (padded) id vector and gather on-device
+    inside the jitted kernel wrappers — no per-hop row re-upload.  Row counts
+    are padded up to multiples of ``bucket`` so the jitted wrappers see a
+    small set of static shapes (bounded recompiles) — the frontier size
+    varies every hop.  The exact-fp32 path and the 8-bit extended codes (no
+    int4 kernel applies) stay on the NumPy batch path.
     """
 
     name = "pallas"
 
-    def __init__(self, interpret: bool | None = None, bucket: int = 64):
-        super().__init__()
+    def __init__(self, interpret: bool | None = None, bucket: int = 64,
+                 resident: bool = True):
+        super().__init__(resident=resident)
         import jax  # raises if jax missing
         import jax.numpy as jnp  # noqa: F401
 
@@ -427,19 +615,97 @@ class PallasEngine(BatchEngine):
         self.interpret = interpret
         self.bucket = bucket
 
+    def _build_table(self, qb: QuantizedBase):
+        if not self.resident:
+            return ResidentView.from_qb(qb)  # host views only, rows re-upload
+        return _DeviceTable(qb)
+
+    # ---- shape bucketing ---------------------------------------------------
+
     def _pad_rows(self, m: int) -> int:
         b = self.bucket
         return max(b, ((m + b - 1) // b) * b)
 
-    def _estimate(self, qb, pq, codes, norms, ip_bar):
-        m = codes.shape[0]
+    def _pad_to_bucket(self, arrays, pad_values):
+        """Pad every row-aligned array up to the bucket multiple of its row
+        count (at least one bucket, so m=0 still yields a valid kernel
+        shape).  Returns ``(m, padded)`` with m the original row count; when
+        m already sits on a bucket multiple the arrays pass through
+        unchanged.  ``pad_values`` supplies the fill per array (e.g. step
+        pads with 1 to keep dequant finite on padding rows)."""
+        m = arrays[0].shape[0]
         mp = self._pad_rows(m)
-        if mp != m:
-            codes = np.concatenate(
-                [codes, np.zeros((mp - m, codes.shape[1]), dtype=codes.dtype)]
-            )
-            norms = np.concatenate([norms, np.zeros(mp - m, dtype=norms.dtype)])
-            ip_bar = np.concatenate([ip_bar, np.ones(mp - m, dtype=ip_bar.dtype)])
+        if mp == m:
+            return m, list(arrays)
+        padded = []
+        for a, v in zip(arrays, pad_values):
+            fill = np.full((mp - m,) + a.shape[1:], v, dtype=a.dtype)
+            padded.append(np.concatenate([a, fill]))
+        return m, padded
+
+    def _pad_ids(self, ids: np.ndarray) -> tuple[int, np.ndarray]:
+        """Bucket-pad an id vector (fill id 0: a safe gather, sliced away)."""
+        m, (idsp,) = self._pad_to_bucket([np.asarray(ids, dtype=np.int32)], [0])
+        return m, idsp
+
+    # ---- resident id-based paths: gather on-device -------------------------
+
+    def _estimate_ids(self, qb, tbl, pq, ids):
+        if not self.resident:
+            return super()._estimate_ids(qb, tbl, pq, ids)
+        gather_est, _ = _pallas_resident_fns()
+        m, idsp = self._pad_ids(ids)
+        out = gather_est(
+            pq.qr[None, :], tbl.binary_codes, tbl.norms, tbl.ip_bar, idsp,
+            interpret=self.interpret,
+        )
+        return np.asarray(out[0, :m], dtype=np.float32)
+
+    def _refine_ids(self, qb, tbl, pq, ids):
+        if not self.resident or qb.ext_bits != 4:
+            # no int4 kernel for 8-bit codes: host gather + NumPy batch path
+            return super()._refine_ids(qb, tbl, pq, ids)
+        _, gather_ref = _pallas_resident_fns()
+        m, idsp = self._pad_ids(ids)
+        out = gather_ref(
+            pq.qr[None, :], tbl.ext_codes, tbl.ext_lo, tbl.ext_step, idsp,
+            interpret=self.interpret,
+        )
+        return np.asarray(out[0, :m], dtype=np.float32)
+
+    def _estimate_ids_many(self, qb, tbl, pqs, sizes, ids):
+        if not self.resident:
+            return super()._estimate_ids_many(qb, tbl, pqs, sizes, ids)
+        gather_est, _ = _pallas_resident_fns()
+        m, idsp = self._pad_ids(ids)
+        Q = np.stack([pq.qr for pq in pqs])  # (B, d)
+        out = np.asarray(gather_est(
+            Q, tbl.binary_codes, tbl.norms, tbl.ip_bar, idsp,
+            interpret=self.interpret,
+        ))  # (B, mp)
+        owner = np.repeat(np.arange(len(pqs)), sizes)
+        return out[owner, np.arange(m)].astype(np.float32, copy=False)
+
+    def _refine_ids_many(self, qb, tbl, pqs, sizes, ids):
+        if not self.resident or qb.ext_bits != 4:
+            return super()._refine_ids_many(qb, tbl, pqs, sizes, ids)
+        _, gather_ref = _pallas_resident_fns()
+        m, idsp = self._pad_ids(ids)
+        Q = np.stack([pq.qr for pq in pqs])  # (B, d)
+        out = np.asarray(gather_ref(
+            Q, tbl.ext_codes, tbl.ext_lo, tbl.ext_step, idsp,
+            interpret=self.interpret,
+        ))  # (B, mp)
+        owner = np.repeat(np.arange(len(pqs)), sizes)
+        return out[owner, np.arange(m)].astype(np.float32, copy=False)
+
+    # ---- matrix paths: caller-gathered rows, re-uploaded per call ----------
+
+    def _estimate(self, qb, pq, codes, norms, ip_bar):
+        m, (codes, norms, ip_bar) = self._pad_to_bucket(
+            [codes, norms, ip_bar], [0, 0, 1]
+        )
+        self.stats.uploads += 1  # gathered rows ship to the device this call
         out = self._binary_est(
             pq.qr[None, :], codes, norms, ip_bar, interpret=self.interpret
         )
@@ -448,14 +714,8 @@ class PallasEngine(BatchEngine):
     def _refine(self, qb, pq, codes, lo, step):
         if qb.ext_bits != 4:  # the kernel is nibble-packed int4 only
             return super()._refine(qb, pq, codes, lo, step)
-        m = codes.shape[0]
-        mp = self._pad_rows(m)
-        if mp != m:
-            codes = np.concatenate(
-                [codes, np.zeros((mp - m, codes.shape[1]), dtype=codes.dtype)]
-            )
-            lo = np.concatenate([lo, np.zeros(mp - m, dtype=lo.dtype)])
-            step = np.concatenate([step, np.ones(mp - m, dtype=step.dtype)])
+        m, (codes, lo, step) = self._pad_to_bucket([codes, lo, step], [0, 0, 1])
+        self.stats.uploads += 1
         out = self._int4_dist2(
             pq.qr[None, :], codes, lo, step, interpret=self.interpret
         )
@@ -464,14 +724,10 @@ class PallasEngine(BatchEngine):
     # ---- fused multi-query paths: the kernels are (B, N)-shaped already ----
 
     def _estimate_many(self, qb, pqs, sizes, codes, norms, ip_bar):
-        m = codes.shape[0]
-        mp = self._pad_rows(m)
-        if mp != m:
-            codes = np.concatenate(
-                [codes, np.zeros((mp - m, codes.shape[1]), dtype=codes.dtype)]
-            )
-            norms = np.concatenate([norms, np.zeros(mp - m, dtype=norms.dtype)])
-            ip_bar = np.concatenate([ip_bar, np.ones(mp - m, dtype=ip_bar.dtype)])
+        m, (codes, norms, ip_bar) = self._pad_to_bucket(
+            [codes, norms, ip_bar], [0, 0, 1]
+        )
+        self.stats.uploads += 1
         Q = np.stack([pq.qr for pq in pqs])  # (B, d)
         out = np.asarray(
             self._binary_est(Q, codes, norms, ip_bar, interpret=self.interpret)
@@ -482,14 +738,8 @@ class PallasEngine(BatchEngine):
     def _refine_many(self, qb, pqs, sizes, codes, lo, step):
         if qb.ext_bits != 4:  # no int4 kernel: NumPy fused path
             return super()._refine_many(qb, pqs, sizes, codes, lo, step)
-        m = codes.shape[0]
-        mp = self._pad_rows(m)
-        if mp != m:
-            codes = np.concatenate(
-                [codes, np.zeros((mp - m, codes.shape[1]), dtype=codes.dtype)]
-            )
-            lo = np.concatenate([lo, np.zeros(mp - m, dtype=lo.dtype)])
-            step = np.concatenate([step, np.ones(mp - m, dtype=step.dtype)])
+        m, (codes, lo, step) = self._pad_to_bucket([codes, lo, step], [0, 0, 1])
+        self.stats.uploads += 1
         Q = np.stack([pq.qr for pq in pqs])  # (B, d)
         out = np.asarray(
             self._int4_dist2(Q, codes, lo, step, interpret=self.interpret)
@@ -498,26 +748,28 @@ class PallasEngine(BatchEngine):
         return out[owner, np.arange(m)].astype(np.float32, copy=False)
 
 
-def get_engine(name: str | None = None) -> DistanceEngine:
-    """Build a fresh engine for ``name`` (see module docstring for the rules)."""
+def get_engine(name: str | None = None, resident: bool = True) -> DistanceEngine:
+    """Build a fresh engine for ``name`` (see module docstring for the rules).
+    ``resident=False`` keeps the PR-2 host-gather semantics on the pallas
+    path (per-call row uploads) — the parity/ablation baseline."""
     if name is None or name == "default":
         name = _DEFAULT_BACKEND
     if name == "auto":
         name = "pallas" if pallas_available() else "batch"
     if name == "scalar":
-        return ScalarEngine()
+        return ScalarEngine(resident=resident)
     if name == "batch":
-        return BatchEngine()
+        return BatchEngine(resident=resident)
     if name == "pallas":
         try:
-            return PallasEngine()
+            return PallasEngine(resident=resident)
         except ImportError as e:  # no jax: degrade, keep serving
             warnings.warn(
                 f"pallas distance backend unavailable ({e}); using batch",
                 RuntimeWarning,
                 stacklevel=2,
             )
-            return BatchEngine()
+            return BatchEngine(resident=resident)
     raise ValueError(f"unknown distance backend {name!r}; expected {BACKENDS}")
 
 
@@ -528,14 +780,21 @@ def execute_requests(
     request kind present, results returned in request order.
 
     This is the engine scheduler's flush primitive: requests from different
-    coroutines (different queries) sharing a kind are stacked and dispatched
-    together — the Pallas wrappers are (B, N)-shaped, so one kernel launch
-    serves every query in the batch.
+    coroutines (different queries — with the shared rendezvous, on different
+    workers) sharing a kind are stacked and dispatched together — the Pallas
+    wrappers are (B, N)-shaped, so one kernel launch serves every query in
+    the batch.  ``refine`` requests carry vertex-id arrays (resident path,
+    resolved against the engine's registered tables) or materialized
+    (codes, lo, step) tuples (host-gather parity path); the two are never
+    mixed within one system but may be mixed within one flush.
     """
     out: list = [None] * len(reqs)
     by_kind: dict[str, list[int]] = {}
     for i, r in enumerate(reqs):
-        by_kind.setdefault(r.kind, []).append(i)
+        kind = r.kind
+        if kind == "refine" and isinstance(r.payload, tuple):
+            kind = "refine_rows"  # materialized host-gather wire format
+        by_kind.setdefault(kind, []).append(i)
     if qb is None and (by_kind.keys() - {"full"}):
         raise ValueError(
             "score requests of kind 'estimate'/'refine' need the QuantizedBase: "
@@ -547,6 +806,10 @@ def execute_requests(
                 qb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
             )
         elif kind == "refine":
+            res = engine.refine_ids_many(
+                qb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
+            )
+        elif kind == "refine_rows":
             res = engine.refine_many(
                 qb, [(reqs[i].pq, *reqs[i].payload) for i in idxs]
             )

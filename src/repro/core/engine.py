@@ -37,6 +37,22 @@ call per request kind — when the buffered row count reaches ``fuse_rows``, or
 when the worker has nothing else to run — charging a single amortized kernel
 dispatch for the whole batch.  With fusion off, score ops are executed
 immediately (per-query dispatch, PR-1 semantics, bitwise-identical results).
+
+Shared rendezvous (``EngineConfig.shared_rendezvous``, requires ``fuse``):
+instead of one rendezvous buffer per worker, ALL workers park their score
+ops in a single system-wide buffer.  It flushes when the buffered row count
+reaches ``fuse_rows`` (the worker that crossed the budget initiates) or when
+EVERY worker is stalled — no coroutine ready anywhere and no query left to
+admit — in which case the earliest-clock contributing worker initiates.  The
+initiator is charged the per-kind fused dispatches; its coroutines rejoin its
+ready queue directly (first one switch-free, exactly the per-worker rule) and
+the other workers' coroutines are resumed via completion events at the flush
+time.  The fused batch B therefore spans the whole system, not one worker's
+in-flight queries.  With one worker the flush points and charges coincide
+with the per-worker topology, so results are bitwise identical; the engine
+also charges a one-time ``CostModel.table_upload_s`` at the first quantized
+dispatch of a run — the register-once pin of the index's resident code
+tables on the distance engine (see core.distance).
 """
 
 from __future__ import annotations
@@ -59,6 +75,9 @@ class EngineConfig:
     page_size: int = 4096
     fuse: bool = False         # cross-query fused score dispatch
     fuse_rows: int = 256       # flush the rendezvous buffer at this row budget
+    shared_rendezvous: bool = False  # one system-wide rendezvous buffer
+                                     # (off = per-worker buffers, PR-2
+                                     # semantics; needs fuse)
 
 
 class _Worker:
@@ -208,27 +227,75 @@ class Engine:
                     worker.t = max(worker.t, time)
                     worker.ready.append((gen, value, qid, True))
 
-        def flush_scores(w: _Worker) -> None:
-            """Flush the rendezvous buffer: one fused dispatch per request
-            kind, each charged a single amortized ``batch_dispatch_s``; every
-            parked coroutine returns to the ready queue with its result."""
-            pend, w.pending, w.pending_rows = w.pending, [], 0
-            reqs = [r for _, _, r in pend]
+        # one-time resident-table pin: the first dispatch of a run that
+        # touches the quantized index charges the register-once upload of its
+        # code tables to the distance engine (core.distance.register_index)
+        upload_charged = False
+
+        def charge_upload(w: _Worker, reqs) -> None:
+            nonlocal upload_charged
+            if upload_charged or self.qb is None:
+                return
+            if any(r.kind in ("estimate", "refine") for r in reqs):
+                upload_charged = True
+                w.t += self.cost.table_upload_s
+
+        def dispatch_batch(initiator: _Worker, reqs: list) -> list:
+            """The flush core both rendezvous topologies share: one fused
+            dispatch per request kind present, each charged a single
+            amortized ``batch_dispatch_s`` to the initiating worker (plus the
+            one-time table upload), stats updated.  Returns the per-request
+            results.  Keeping this in ONE place is what guarantees the
+            1-worker bitwise parity between the topologies."""
+            charge_upload(initiator, reqs)
             flop_by_kind: dict[str, float] = {}
             for r in reqs:
                 flop_by_kind[r.kind] = flop_by_kind.get(r.kind, 0.0) + r.flop_s
             for flop_s in flop_by_kind.values():
-                w.t += self.cost.fused_batch_s(flop_s)
+                initiator.t += self.cost.fused_batch_s(flop_s)
             outs = distance_mod.execute_requests(self.dist, self.qb, reqs)
             stats.score_flushes += len(flop_by_kind)
             stats.score_requests += len(reqs)
             stats.score_rows += sum(r.rows for r in reqs)
+            return outs
+
+        def flush_scores(w: _Worker) -> None:
+            """Flush the per-worker rendezvous buffer: every parked coroutine
+            returns to the ready queue with its result."""
+            pend, w.pending, w.pending_rows = w.pending, [], 0
+            outs = dispatch_batch(w, [r for _, _, r in pend])
             for i, ((gen, qid, _), val) in enumerate(zip(pend, outs)):
                 # the first resume continues straight out of the fused
                 # dispatch — no switch charge, so a rendezvous of one costs
                 # exactly what inline execution costs; every later resume is
                 # a genuine coroutine switch and pays for it
                 w.ready.append((gen, val, qid, i > 0))
+
+        # system-wide shared rendezvous: (worker, gen, qid, req) from ALL
+        # workers, flushed at fuse_rows or when every worker is stalled
+        shared = cfg.fuse and cfg.shared_rendezvous
+        shared_pending: list = []
+        shared_rows = 0
+
+        def flush_shared(initiator: _Worker) -> None:
+            """Flush the system-wide rendezvous buffer.  The initiator (the
+            worker that crossed the row budget, or the earliest-clock
+            contributor when every worker stalled) drives the fused dispatch
+            and is charged for it; its own coroutines rejoin its ready queue
+            directly — the first without a switch charge, exactly the
+            per-worker flush rule, so a one-worker system is bitwise
+            identical to per-worker fusion — while other workers' coroutines
+            are resumed via events at the flush completion time."""
+            nonlocal shared_pending, shared_rows
+            pend, shared_pending, shared_rows = shared_pending, [], 0
+            outs = dispatch_batch(initiator, [r for _, _, _, r in pend])
+            first_own = True
+            for (wkr, gen, qid, _), val in zip(pend, outs):
+                if wkr is initiator:
+                    wkr.ready.append((gen, val, qid, not first_own))
+                    first_own = False
+                else:
+                    push_event(initiator.t, "resume", (wkr, gen, val, qid))
 
         def run_worker_action(w: _Worker) -> None:
             """One scheduling action on worker w (paper Fig. 3b loop body)."""
@@ -244,7 +311,9 @@ class Engine:
                     w.ready.append((gen, None, qid, True))
                 elif w.pending:
                     # nothing else can run: flush the rendezvous buffer so the
-                    # parked scorers make progress
+                    # parked scorers make progress.  (Shared topology: a lone
+                    # stalled worker must NOT flush — the global loop flushes
+                    # only when EVERY worker is stalled.)
                     flush_scores(w)
                 else:
                     return
@@ -278,6 +347,13 @@ class Engine:
                     value = None
                 elif kind == "score":
                     req = op[1]
+                    if shared:
+                        nonlocal shared_rows
+                        shared_pending.append((w, gen, qid, req))
+                        shared_rows += req.rows
+                        if shared_rows >= cfg.fuse_rows:
+                            flush_shared(w)
+                        return  # parked in the system-wide rendezvous
                     if cfg.fuse:
                         w.pending.append((gen, qid, req))
                         w.pending_rows += req.rows
@@ -285,6 +361,7 @@ class Engine:
                             flush_scores(w)
                         return  # parked in the rendezvous buffer
                     # fusion off: execute immediately (per-query dispatch)
+                    charge_upload(w, (req,))
                     w.t += self.cost.fused_batch_s(req.flop_s)
                     value = distance_mod.execute_requests(
                         self.dist, self.qb, [req]
@@ -346,6 +423,8 @@ class Engine:
 
         # ------------------------------------------------------- global loop
         def runnable(w: _Worker) -> bool:
+            # a worker whose only work sits in the SHARED rendezvous is
+            # stalled — it cannot flush alone; w.pending is per-worker only
             return (
                 bool(w.ready)
                 or bool(w.pending)
@@ -363,6 +442,27 @@ class Engine:
                 # the action may have published LOCKED slots (finish_load on a
                 # demand path): reschedule the parked waiters now
                 drain_pool_resumes(w.t)
+            elif shared_pending:
+                # every worker is stalled: flush the system-wide rendezvous.
+                # The earliest-clock contributing worker initiates (it would
+                # otherwise sit idle) — the fused batch spans all workers.
+                contributors = {id(wk): wk for wk, _, _, _ in shared_pending}
+                initiator = min(
+                    contributors.values(), key=lambda x: (x.t, x.wid)
+                )
+                if next_event_t is not None and next_event_t <= initiator.t:
+                    # completions already due would have been applied before a
+                    # per-worker flush action; apply them and re-evaluate —
+                    # a resumed coroutine runs before the rendezvous flushes
+                    apply_due_events(initiator.t)
+                    continue
+                # flush, then continue the initiator in the same breath: its
+                # first coroutine resumes straight out of the fused dispatch
+                # with no event application in between, exactly the
+                # per-worker flush action (1 worker => bitwise identical)
+                flush_shared(initiator)
+                run_worker_action(initiator)
+                drain_pool_resumes(initiator.t)
             elif events:
                 t0 = events[0][0]
                 apply_due_events(t0)  # busy-poll: jump to next completion
@@ -386,6 +486,7 @@ def run_workload(
     qb=None,
     fuse: bool = False,
     fuse_rows: int = 256,
+    shared_rendezvous: bool = False,
 ) -> tuple[list, WorkloadStats]:
     """Convenience wrapper: build an engine, run all queries, return results+stats."""
     engine = Engine(
@@ -394,7 +495,7 @@ def run_workload(
         cost=cost or CostModel(),
         config=EngineConfig(
             n_workers=n_workers, batch_size=batch_size, page_size=page_size,
-            fuse=fuse, fuse_rows=fuse_rows,
+            fuse=fuse, fuse_rows=fuse_rows, shared_rendezvous=shared_rendezvous,
         ),
         dist=dist,
         qb=qb,

@@ -270,3 +270,54 @@ class PreparedQuery:
     qnorm: float
     qunit: np.ndarray  # qr / ||qr||
     q_orig: np.ndarray  # original query (d,) — for exact fp32 refinement paths
+
+
+@dataclasses.dataclass
+class ResidentView:
+    """Register-once host view of an index's resident code tables.
+
+    The distance plane registers each ``QuantizedBase`` exactly once
+    (``DistanceEngine.register_index``) and serves every later id-based score
+    request from this handle: contiguous aliases of the level-1 binary codes /
+    norms / ip_bar and the level-2 extended codes / dequant params, so the
+    per-hop hot path is a single fancy-index gather per table — no repeated
+    per-call re-materialization of code matrices from payload bytes.  The
+    device backends wrap the same arrays as device-resident tables (uploaded
+    once, gathered on-device).
+    """
+
+    qb: "QuantizedBase"          # strong ref: pins id(qb) for the registry key
+    binary_codes: np.ndarray     # (n, d/8) uint8, contiguous
+    norms: np.ndarray            # (n,) float32
+    ip_bar: np.ndarray           # (n,) float32
+    ext_codes: np.ndarray        # (n, d/2 or d) uint8, contiguous
+    ext_lo: np.ndarray           # (n,) float32
+    ext_step: np.ndarray         # (n,) float32
+
+    @classmethod
+    def from_qb(cls, qb: "QuantizedBase") -> "ResidentView":
+        return cls(
+            qb=qb,
+            binary_codes=np.ascontiguousarray(qb.binary_codes),
+            norms=np.ascontiguousarray(qb.norms),
+            ip_bar=np.ascontiguousarray(qb.ip_bar),
+            ext_codes=np.ascontiguousarray(qb.ext_codes),
+            ext_lo=np.ascontiguousarray(qb.ext_lo),
+            ext_step=np.ascontiguousarray(qb.ext_step),
+        )
+
+    def gather_level1(
+        self, ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return self.binary_codes[ids], self.norms[ids], self.ip_bar[ids]
+
+    def gather_level2(
+        self, ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return self.ext_codes[ids], self.ext_lo[ids], self.ext_step[ids]
+
+    def nbytes(self) -> int:
+        return (
+            self.binary_codes.nbytes + self.norms.nbytes + self.ip_bar.nbytes
+            + self.ext_codes.nbytes + self.ext_lo.nbytes + self.ext_step.nbytes
+        )

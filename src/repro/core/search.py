@@ -28,13 +28,19 @@ tests/test_engine.py asserts (async results == sync results).
 Search coroutines never compute a distance themselves: every fresh-neighbor
 frontier and every fetched record group is yielded to the engine as a
 ``("score", ScoreRequest)`` op carrying the prepared query and the rows to
-evaluate.  The engine executes it through the pluggable DistanceEngine
-(core.distance) — immediately when fusion is off (per-query dispatch,
-PR-1 semantics), or fused with the frontiers of the OTHER coroutines in
-flight on the worker when fusion is on (one kernel dispatch serving many
-queries).  tests/test_distance.py asserts exact id/hop/read parity across
-backends; tests/test_fusion.py asserts parity between fused and per-query
-dispatch.
+evaluate — as VERTEX IDS on the quantized index (the engine owns the
+register-once resident code tables and gathers the rows itself, on-device
+for the pallas backend; ``SearchContext.resident_ids=False`` materializes
+the code matrices from the fetched payload bytes instead, the host-gather
+parity path).  The engine executes the request through the pluggable
+DistanceEngine (core.distance) — immediately when fusion is off (per-query
+dispatch, PR-1 semantics), or fused with the frontiers of the OTHER
+coroutines in flight when fusion is on (one kernel dispatch serving many
+queries; with the shared rendezvous, the coroutines of ALL workers).
+tests/test_distance.py asserts exact id/hop/read parity across backends;
+tests/test_fusion.py asserts parity between fused and per-query dispatch;
+tests/test_resident.py asserts resident==host-gather and shared==per-worker
+parity.
 """
 
 from __future__ import annotations
@@ -73,6 +79,10 @@ class SearchContext:
     # compressed index, full fp32 distance on the DiskANN-style index.
     refine_cost_s: float = 0.0
     dist: object | None = None      # DistanceEngine; None -> process default
+    # resident wire format: refine ScoreRequests carry vertex ids, resolved
+    # against the engine's registered tables (False = PR-2 semantics, the
+    # coroutine materializes code matrices from the fetched payload bytes)
+    resident_ids: bool = True
 
     def __post_init__(self):
         if self.dist is None:
@@ -403,8 +413,10 @@ def _estimate_scores(ctx: SearchContext, pq, ids: list[int]):
 
 def _refine_records(ctx: SearchContext, pq, recs: list):
     """Yield one level-2/fp32 score op refining a fetched record group;
-    returns the refined distance array (one per record, in order)."""
-    kind, payload = ctx.index.refine_payload(recs)
+    returns the refined distance array (one per record, in order).  On the
+    quantized index the request carries only vertex ids (the engine owns the
+    resident level-2 table) unless ``ctx.resident_ids`` is off."""
+    kind, payload = ctx.index.refine_payload(recs, resident=ctx.resident_ids)
     req = distance_mod.ScoreRequest(
         kind=kind,
         rows=len(recs),

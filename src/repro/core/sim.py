@@ -69,6 +69,11 @@ class CostModel:
     batch_dispatch_s: float = 0.3e-6     # one kernel/ufunc dispatch per batched
                                          # distance evaluation, amortized over
                                          # all rows of the batch
+    table_upload_s: float = 25e-6        # one-time pin of an index's resident
+                                         # code tables on the distance engine
+                                         # (host->device DMA of ~hundreds of KB
+                                         # at PCIe rates), charged per
+                                         # registered index, NOT per hop
 
     def estimate(self, count: int, dim: int) -> float:
         """Level-1 binary distance estimates for `count` vertices."""

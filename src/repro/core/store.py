@@ -171,9 +171,17 @@ class VeloIndex:
         codes, lo, step = self.record_matrix(recs)
         return engine.refine(self.qb, pq, codes, lo, step)
 
-    def refine_payload(self, recs: list[DecodedRecord]):
+    def refine_payload(self, recs: list[DecodedRecord], resident: bool = True):
         """(kind, payload) of the ScoreRequest refining this record group:
-        quantized records refine on the extended-code path."""
+        quantized records refine on the extended-code path.  The resident
+        wire format carries only the vertex ids — the engine gathers the
+        rows from its registered level-2 table (on-device for pallas);
+        ``resident=False`` materializes the (codes, lo, step) matrices from
+        the fetched payload bytes (the host-gather parity path).  The two
+        are bitwise interchangeable: tests assert the on-disk payloads
+        round-trip to exactly the build-time code tables."""
+        if resident:
+            return "refine", np.asarray([r.vid for r in recs], dtype=np.int64)
         return "refine", self.record_matrix(recs)
 
     # -- accounting (Table 3) --------------------------------------------------
@@ -302,9 +310,10 @@ class FixedIndex:
             return np.empty(0, dtype=np.float32)
         return engine.refine_full(pq.q_orig, self.record_matrix(recs))
 
-    def refine_payload(self, recs: list[DecodedRecord]):
+    def refine_payload(self, recs: list[DecodedRecord], resident: bool = True):
         """(kind, payload) of the ScoreRequest refining this record group:
-        DiskANN-style records carry full fp32 vectors."""
+        DiskANN-style records carry full fp32 vectors (nothing quantized is
+        resident, so ``resident`` does not apply)."""
         return "full", self.record_matrix(recs)
 
     def disk_bytes(self) -> int:
