@@ -1,0 +1,171 @@
+"""Multi-tenant serving plane: shared pool vs static partition under skew.
+
+N tenants (independent indexes) are hosted on ONE engine (core.serving).  The
+experiment drives a zipfian hot-tenant arrival mix and a bursty mix through
+two pool planes at the same total byte budget:
+
+  * shared    — one RecordBufferPool spanning all tenants (global clock);
+  * partition — each tenant statically owns its isolated-system pool size.
+
+Claims checked: under skew the shared pool serves the HOT tenant strictly
+better than its static share (idle tenants' cold slots are lent to the busy
+one) and no tenant's recall moves; per-tenant soft quotas cap the hot
+tenant's slot ownership while staying eviction-safe; with the fused distance
+plane one rendezvous flush spans tenants (cross-tenant fusion); the shared-
+rendezvous flush/I-O overlap engages at multiple workers without disturbing
+recall.
+
+Standalone:  python -m benchmarks.bench_multitenant [--full] [--strict]
+(--strict exits non-zero when any claim check fails, same contract as
+benchmarks/run.py --strict.)
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+from repro.core import baselines
+from repro.core import workload as workload_mod
+from repro.core.serving import ServingPlane, TenantSpec, evaluate_plane
+
+
+def _tenants(quick: bool) -> list[TenantSpec]:
+    if quick:
+        dims = dict(n=2500, d=64, n_queries=200, R=20, L=40)
+    else:
+        dims = dict(n=8000, d=96, n_queries=400, R=24, L=48)
+    specs = []
+    for i in range(3):
+        w = common.Workload(f"mt{i}", seed=i, **dims)
+        specs.append(TenantSpec.from_dataset(f"tenant{i}", w.ds, w.graph, w.qb))
+    return specs
+
+
+def _plane_cfg(quick: bool, **kw) -> baselines.SystemConfig:
+    kw.setdefault("buffer_ratio", 0.15)
+    kw.setdefault("n_workers", 2 if quick else 4)
+    kw.setdefault("batch_size", 8)
+    return baselines.SystemConfig(**kw)
+
+
+def run(quick: bool = True) -> dict:
+    specs = _tenants(quick)
+    n_q = [len(s.queries) for s in specs]
+    n_ops = 300 if quick else 900
+    zipf = workload_mod.zipfian_mix(n_q, n_ops, s=1.6, seed=0)
+    bursty = workload_mod.bursty_mix(n_q, n_ops, mean_burst=12, s=1.2, seed=0)
+
+    results: dict[str, dict] = {}
+    for wname, wload in [("zipf", zipf), ("bursty", bursty)]:
+        for mode, shared in [("shared", True), ("partition", False)]:
+            plane = ServingPlane(specs, _plane_cfg(quick), shared_pool=shared)
+            results[f"{wname}/{mode}"] = evaluate_plane(plane, wload)
+
+    # per-tenant soft quota: cap every tenant at 40% of the shared pool
+    quota_plane = ServingPlane(
+        specs, _plane_cfg(quick, tenant_quota=0.4), shared_pool=True
+    )
+    results["zipf/quota40"] = evaluate_plane(quota_plane, zipf)
+    quota_plane.pool.check_invariants()  # accounting == ownership, post-run
+    quota_owned = [int(x) for x in quota_plane.pool.tenant_owned]
+    quota_cap = int(quota_plane.pool.tenant_cap[0])
+
+    # fused distance plane across tenants + flush/I-O overlap
+    for name, extra in [
+        ("fused", dict(fuse=True, fuse_rows=128, shared_rendezvous=True)),
+        ("fused+overlap", dict(fuse=True, fuse_rows=128,
+                               shared_rendezvous=True, overlap_flush=True)),
+    ]:
+        plane = ServingPlane(specs, _plane_cfg(quick, **extra), shared_pool=True)
+        results[f"zipf/{name}"] = evaluate_plane(plane, zipf)
+
+    tenant_names = [s.name for s in specs]
+    hot = tenant_names[int(zipf.counts().argmax())]
+
+    rows = []
+    for key, res in results.items():
+        t = res["tenants"]
+        rows.append([
+            key, res["workload"],
+            f"{res['qps']:.0f}",
+            f"{res['hit_rate']:.1%}",
+            "  ".join(f"{t[n]['hit_rate']:.1%}" for n in tenant_names),
+            "  ".join(f"{t[n]['recall@k']:.3f}" for n in tenant_names),
+            res["cross_tenant_flushes"], res["overlap_flushes"],
+            res["quota_reclaims"],
+        ])
+    text = common.fmt_table(
+        ["config", "mix", "QPS", "hit", "hit/tenant", "recall/tenant",
+         "xten", "ovlp", "reclaim"],
+        rows,
+    )
+    text += (
+        f"\n\nhot tenant: {hot}; quota40 slot ownership {quota_owned}"
+        f" (cap {quota_cap}, pool {quota_plane.pool.n_slots})"
+    )
+
+    def hit(key, name):
+        return results[key]["tenants"][name]["hit_rate"]
+
+    def recalls(key):
+        return [v["recall@k"] for v in results[key]["tenants"].values()]
+
+    checks = {
+        # the acceptance bar: under zipfian skew the shared pool serves the
+        # hot tenant STRICTLY better than its static partition share
+        "shared_hot_hit_beats_partition":
+            hit("zipf/shared", hot) > hit("zipf/partition", hot),
+        "shared_global_hit_no_worse":
+            results["zipf/shared"]["hit_rate"]
+            >= results["zipf/partition"]["hit_rate"],
+        # sharing the pool must not cost anyone recall
+        "recall_floor_all_modes": all(
+            r > 0.6 for key in results for r in recalls(key)
+        ),
+        # soft quotas: the cap binds (reclaims happened), ownership respects
+        # it, and admissions degrade to uncached instead of erroring
+        "quota_cap_respected": all(o <= quota_cap for o in quota_owned),
+        "quota_reclaims_active":
+            results["zipf/quota40"]["quota_reclaims"] > 0,
+        # one rendezvous flush spans tenants (combined-table routing)
+        "cross_tenant_fusion_active":
+            results["zipf/fused"]["cross_tenant_flushes"] > 0,
+        # the flush/I-O overlap engages at multiple workers, recall unmoved
+        "overlap_engages":
+            results["zipf/fused+overlap"]["overlap_flushes"] > 0,
+        "overlap_recall_parity": all(
+            abs(a - b) < 0.05 for a, b in
+            zip(recalls("zipf/fused"), recalls("zipf/fused+overlap"))
+        ),
+    }
+    return {
+        "name": "multitenant_serving",
+        "hot_tenant": hot,
+        "results": results,
+        "quota": {"owned": quota_owned, "cap": quota_cap},
+        "text": text,
+        "checks": checks,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="quick profile (the default; kept explicit for CI)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any claim check fails")
+    args = ap.parse_args()
+    res = run(quick=not args.full)
+    print(res["text"])
+    ok = True
+    for check, passed in res["checks"].items():
+        ok &= bool(passed)
+        print(f"  [{'PASS' if passed else 'FAIL'}] {check}")
+    if args.strict and not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,18 +34,19 @@ def active_backend() -> str:
 
 
 def set_fuse(on: bool, rows: int | None = None,
-             shared: bool | None = None) -> None:
+             shared: bool | None = None, overlap: bool | None = None) -> None:
     """Enable cross-query fused score dispatch for every system the
-    benchmarks build (threads run.py's --fuse / --shared-rendezvous flags
-    through SystemConfig)."""
-    baselines_mod.set_default_fuse(on, rows, shared)
+    benchmarks build (threads run.py's --fuse / --shared-rendezvous /
+    --overlap-flush flags through SystemConfig)."""
+    baselines_mod.set_default_fuse(on, rows, shared, overlap)
 
 
 def fuse_active() -> dict:
     """The fuse settings systems will actually get, for results.json."""
     on, rows = baselines_mod.default_fuse()
     return {"enabled": on, "rows": rows,
-            "shared_rendezvous": baselines_mod.default_shared_rendezvous()}
+            "shared_rendezvous": baselines_mod.default_shared_rendezvous(),
+            "overlap_flush": baselines_mod.default_overlap_flush()}
 
 
 def set_calibration(path: str) -> None:

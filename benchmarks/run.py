@@ -2,7 +2,7 @@
 
   python -m benchmarks.run [--quick | --full] [--only NAME] [--backend NAME]
                            [--fuse] [--fuse-rows N] [--shared-rendezvous]
-                           [--calibration PATH] [--strict]
+                           [--overlap-flush] [--calibration PATH] [--strict]
 
 Writes benchmarks/out/results.json and prints each table with the paper
 claims it validates.  --strict exits non-zero when any module errors or any
@@ -41,6 +41,7 @@ MODULES = [
     "bench_breakdown",       # Fig 14
     "bench_index_size",      # Table 3
     "bench_fusion",          # cross-query fused dispatch: B x fuse-budget sweep
+    "bench_multitenant",     # serving plane: shared pool vs partition under skew
 ]
 
 
@@ -61,6 +62,10 @@ def main():
     ap.add_argument("--shared-rendezvous", action="store_true",
                     help="one system-wide rendezvous buffer spanning all "
                          "workers (implies --fuse)")
+    ap.add_argument("--overlap-flush", action="store_true",
+                    help="overlap the shared-rendezvous stall flush with "
+                         "other workers' in-flight completions (implies "
+                         "--shared-rendezvous)")
     ap.add_argument("--calibration", default=None, metavar="PATH",
                     help="per-backend CostModel overrides from "
                          "benchmarks/calibrate.py (benchmarks/out/"
@@ -73,9 +78,14 @@ def main():
     quick = not args.full
     if args.backend:
         common.set_backend(args.backend)
-    if args.fuse or args.fuse_rows is not None or args.shared_rendezvous:
-        common.set_fuse(args.fuse or args.shared_rendezvous, args.fuse_rows,
-                        shared=args.shared_rendezvous or None)
+    if (args.fuse or args.fuse_rows is not None or args.shared_rendezvous
+            or args.overlap_flush):
+        common.set_fuse(
+            args.fuse or args.shared_rendezvous or args.overlap_flush,
+            args.fuse_rows,
+            shared=(args.shared_rendezvous or args.overlap_flush) or None,
+            overlap=args.overlap_flush or None,
+        )
     if args.calibration:
         common.set_calibration(args.calibration)
     print(f"distance backend: {common.active_backend()}  fuse: {common.fuse_active()}")

@@ -15,4 +15,7 @@ Submodules:
   sim         — discrete-event SSD + CPU cost model
   engine      — coroutine scheduler (paper Fig. 3) sync/async executors
   baselines   — DiskANN-, Starling-, PipeANN-style system configurations
+  workload    — multi-tenant arrival mixes (uniform / zipfian / bursty)
+  serving     — multi-tenant serving plane: N indexes on one engine, shared
+                pool with per-tenant quotas, cross-tenant fused dispatch
 """

@@ -46,22 +46,28 @@ from repro.core.vamana import VamanaGraph
 _DEFAULT_FUSE = False
 _DEFAULT_FUSE_ROWS = 256
 _DEFAULT_SHARED_RV = False
+_DEFAULT_OVERLAP = False
 _DEFAULT_CALIBRATION: dict | None = None
 
 
 def set_default_fuse(
-    on: bool, rows: int | None = None, shared: bool | None = None
+    on: bool, rows: int | None = None, shared: bool | None = None,
+    overlap: bool | None = None,
 ) -> None:
     """Process-wide default for cross-query fused score dispatch — the hook
     ``benchmarks/run.py --fuse`` threads through (mirrors
     ``distance.set_default_backend``).  ``shared`` flips the rendezvous
-    topology every system inherits (one system-wide buffer vs per-worker)."""
-    global _DEFAULT_FUSE, _DEFAULT_FUSE_ROWS, _DEFAULT_SHARED_RV
+    topology every system inherits (one system-wide buffer vs per-worker);
+    ``overlap`` lets the shared-rendezvous stall flush overlap another
+    worker's in-flight completions instead of draining them first."""
+    global _DEFAULT_FUSE, _DEFAULT_FUSE_ROWS, _DEFAULT_SHARED_RV, _DEFAULT_OVERLAP
     _DEFAULT_FUSE = bool(on)
     if rows is not None:
         _DEFAULT_FUSE_ROWS = int(rows)
     if shared is not None:
         _DEFAULT_SHARED_RV = bool(shared)
+    if overlap is not None:
+        _DEFAULT_OVERLAP = bool(overlap)
 
 
 def default_fuse() -> tuple[bool, int]:
@@ -70,6 +76,10 @@ def default_fuse() -> tuple[bool, int]:
 
 def default_shared_rendezvous() -> bool:
     return _DEFAULT_SHARED_RV
+
+
+def default_overlap_flush() -> bool:
+    return _DEFAULT_OVERLAP
 
 
 def set_default_calibration(calib: dict | None) -> None:
@@ -127,6 +137,12 @@ class SystemConfig:
     shared_rendezvous: bool | None = None  # one system-wide rendezvous buffer
                                   # spanning all workers (None -> process
                                   # default; off = per-worker PR-2 semantics)
+    overlap_flush: bool | None = None  # overlap the shared-rendezvous stall
+                                  # flush with other workers' in-flight
+                                  # completions (None -> process default)
+    tenant_quota: float | None = None  # serving plane: per-tenant soft cap on
+                                  # shared-pool slots, as a fraction of the
+                                  # pool (None/0 = pure global clock)
     resident_plane: bool = True   # register-once resident tables + id-based
                                   # refine requests (False = host-gather PR-2
                                   # semantics: per-call row materialization)
@@ -159,6 +175,9 @@ class System:
             dict(pool.pressure_stats())
             if pool is not None and hasattr(pool, "pressure_stats") else None
         )
+        # snapshot cumulative accessor counters so repeated run()/evaluate()
+        # calls on one system report THIS run's delta, not a double count
+        hits0, misses0 = self.ctx.accessor.stats()
         results, stats = run_workload(
             self.make_coroutine,
             queries,
@@ -173,10 +192,11 @@ class System:
             fuse=self.config.fuse,
             fuse_rows=self.config.fuse_rows,
             shared_rendezvous=bool(self.config.shared_rendezvous),
+            overlap_flush=bool(self.config.overlap_flush),
         )
         hits, misses = self.ctx.accessor.stats()
-        stats.cache_hits = hits
-        stats.cache_misses = misses
+        stats.cache_hits = hits - hits0
+        stats.cache_misses = misses - misses0
         if pressure0 is not None:
             # the ONE pool instance is shared by all n_workers; report this
             # run's delta of its pressure counters (the engine counts
@@ -231,6 +251,10 @@ def build_system(
         shared_rendezvous=(
             default_shared_rendezvous()
             if config.shared_rendezvous is None else config.shared_rendezvous
+        ),
+        overlap_flush=(
+            default_overlap_flush()
+            if config.overlap_flush is None else config.overlap_flush
         ),
     )
     cost = cost or CostModel()
@@ -360,8 +384,14 @@ def evaluate(
     ds: Dataset,
     ssd_config: SSDConfig | None = None,
 ) -> dict:
-    """Run all dataset queries; return the paper's metrics."""
+    """Run all dataset queries; return the paper's metrics.
+
+    Stats collection is idempotent: the distance engine's cumulative counters
+    are snapshotted around the run, so calling ``evaluate`` twice on one
+    system reports each run's own dispatches/uploads — not a double count."""
+    dist0 = dataclasses.replace(system.ctx.dist.stats)
     results, stats = system.run(ds.queries, ssd_config)
+    dist1 = system.ctx.dist.stats
     k = ds.k
     ids = np.full((len(results), k), -1, dtype=np.int64)
     for i, r in enumerate(results):
@@ -373,6 +403,7 @@ def evaluate(
         "distance_backend": system.ctx.dist.name,
         "fuse": bool(system.config.fuse),
         "shared_rendezvous": bool(system.config.shared_rendezvous),
+        "overlap_flush": bool(system.config.overlap_flush),
         "resident_plane": bool(system.config.resident_plane),
         "recall@k": rec,
         "qps": stats.qps,
@@ -385,12 +416,13 @@ def evaluate(
         "coalesced_record_loads": stats.coalesced_record_loads,
         "group_admits": stats.group_admits,
         "clock_skips": stats.clock_skips,
+        "overlap_flushes": stats.overlap_flushes,
         "disk_bytes": system.disk_bytes(),
         "memory_bytes": system.memory_bytes(),
         "mean_hops": float(np.mean([r.hops for r in results])),
-        "dist_dispatches": system.ctx.dist.stats.dispatches(),
-        "dist_uploads": system.ctx.dist.stats.uploads,
-        "resident_gathers": system.ctx.dist.stats.resident_gathers,
+        "dist_dispatches": dist1.dispatches() - dist0.dispatches(),
+        "dist_uploads": dist1.uploads - dist0.uploads,
+        "resident_gathers": dist1.resident_gathers - dist0.resident_gathers,
         "score_requests_per_flush": stats.requests_per_flush,
         "score_rows_per_flush": stats.rows_per_flush,
     }

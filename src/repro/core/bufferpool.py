@@ -33,6 +33,18 @@ groups age (and free whole pages' worth of slots) as a unit.
 One pool instance is shared by every worker of a system (`build_system`
 creates it once); coroutines on any worker coalesce on the same LOCKED slots.
 
+Multi-tenant quotas (the serving plane, core.serving): when the pool is
+shared by several tenants (``tenant_of`` maps each vid to its tenant), a
+*soft clock-based quota* can cap the slots any one tenant holds
+(``tenant_quota``: a fraction of the pool, or explicit per-tenant caps).  A
+tenant at its cap acquires slots by running the second-chance sweep over its
+OWN slots only (``quota_reclaims``) — it recycles itself instead of growing
+— and an admission that finds nothing of its own evictable is simply skipped
+(``quota_denials``: the record is served uncached, never an error).  Under
+its cap a tenant uses the free list and the plain global clock, so an idle
+tenant's cold slots are naturally lent to busy ones.  Quota off (the
+default) is the pure global clock — bit-identical to the single-tenant pool.
+
 Adaptation note (DESIGN.md §2): the paper uses CAS atomics because coroutines
 race on slots; our engine is single-threaded per worker and lockstep on device,
 so the same state machine is evolved without atomics — transitions and
@@ -61,7 +73,8 @@ class RecordBufferPool:
     """Caches decoded records at *record* granularity."""
 
     def __init__(self, n_slots: int, vid_to_page: np.ndarray,
-                 group_demote: bool = False):
+                 group_demote: bool = False, tenant_of: np.ndarray | None = None,
+                 tenant_quota: float | list | tuple | np.ndarray | None = None):
         assert n_slots >= 1
         self.n_slots = n_slots
         self.disk_pages = np.asarray(vid_to_page, dtype=np.int64)  # immutable
@@ -72,6 +85,29 @@ class RecordBufferPool:
         self.slots: list[object | None] = [None] * n_slots
         self.free_list: list[int] = list(range(n_slots - 1, -1, -1))
         self.hand = 0
+        # multi-tenant bookkeeping: who owns each vid / each non-FREE slot,
+        # how many slots each tenant holds, and the per-tenant caps (None ==
+        # quota off: the accounting still runs, admission never consults it)
+        self.tenant_of = (
+            None if tenant_of is None else np.asarray(tenant_of, dtype=np.int64)
+        )
+        self.n_tenants = (
+            1 if self.tenant_of is None else int(self.tenant_of.max()) + 1
+        )
+        self.slot_tenant = np.full(n_slots, -1, dtype=np.int64)
+        self.tenant_owned = np.zeros(self.n_tenants, dtype=np.int64)
+        self.tenant_hand = np.zeros(self.n_tenants, dtype=np.int64)
+        # incremental per-tenant slot index (kept by _claim/_release) so the
+        # quota reclaim sweep touches only the tenant's own slots
+        self.tenant_slots: list[set[int]] = [set() for _ in range(self.n_tenants)]
+        if tenant_quota is None or (np.isscalar(tenant_quota) and not tenant_quota):
+            self.tenant_cap = None
+        elif np.isscalar(tenant_quota):
+            cap = max(1, int(float(tenant_quota) * n_slots))
+            self.tenant_cap = np.full(self.n_tenants, cap, dtype=np.int64)
+        else:
+            self.tenant_cap = np.asarray(tenant_quota, dtype=np.int64)
+            assert self.tenant_cap.shape == (self.n_tenants,)
         # group admits: slot -> admitting group id (0 == admitted alone),
         # plus the reverse index so group demotion is O(group), not O(pool)
         self.group_demote = group_demote
@@ -90,6 +126,11 @@ class RecordBufferPool:
         self.coalesced_record_loads = 0  # waiters served by someone else's load
         self.group_admits = 0            # admit_group calls that admitted >= 1
         self.clock_skips = 0             # sweep steps that landed on LOCKED
+        self.quota_reclaims = 0          # over-quota tenants recycling their own
+        self.quota_denials = 0           # slot ACQUISITIONS denied at the cap —
+                                         # one uncached demand admission can
+                                         # contribute two (its LOCKED-window
+                                         # reservation and the fallback admit)
 
     # ------------------------------------------------------------- residency
 
@@ -157,6 +198,55 @@ class RecordBufferPool:
             return self.slots[self._slot_of(vid)]
         return None
 
+    # --------------------------------------------------------------- tenants
+
+    def _tenant(self, vid: int) -> int:
+        return 0 if self.tenant_of is None else int(self.tenant_of[vid])
+
+    def _claim(self, slot: int, vid: int) -> None:
+        """Slot-ownership bookkeeping on every FREE -> non-FREE transition."""
+        t = self._tenant(vid)
+        self.slot_tenant[slot] = t
+        self.tenant_owned[t] += 1
+        self.tenant_slots[t].add(slot)
+
+    def _release(self, slot: int) -> None:
+        t = int(self.slot_tenant[slot])
+        if t >= 0:
+            self.tenant_owned[t] -= 1
+            self.tenant_slots[t].discard(slot)
+            self.slot_tenant[slot] = -1
+
+    def _reclaim_from_tenant(self, tenant: int) -> bool:
+        """Second-chance sweep restricted to ``tenant``'s own slots — the
+        over-quota acquisition path.  The sweep iterates ONLY the slots the
+        tenant owns (O(own slots), not O(pool)), resuming from a per-tenant
+        hand, with the same OCCUPIED -> MARKED -> evict rules as the global
+        clock; LOCKED slots are skipped and counted.  Two passes suffice: the
+        first demotes (and evicts anything already MARKED), the second evicts
+        what the first demoted.  Returns True when one slot was freed."""
+        if not self.tenant_slots[tenant]:
+            return False
+        own = np.asarray(sorted(self.tenant_slots[tenant]), dtype=np.int64)
+        start = int(np.searchsorted(own, int(self.tenant_hand[tenant])))
+        order = np.roll(own, -start)
+        for _sweep in range(2):
+            for s in order:
+                s = int(s)
+                st = self.state[s]
+                if st == SlotState.OCCUPIED:
+                    self.state[s] = SlotState.MARKED
+                    if self.group_demote and self.slot_group[s]:
+                        self._demote_group(int(self.slot_group[s]))
+                elif st == SlotState.MARKED:
+                    self.tenant_hand[tenant] = (s + 1) % self.n_slots
+                    self._evict_slot(s)
+                    self.quota_reclaims += 1
+                    return True
+                elif st == SlotState.LOCKED and _sweep == 0:
+                    self.clock_skips += 1
+        return False  # every owned slot pinned by an in-flight load
+
     # ---------------------------------------------------- async LOCKED window
 
     def begin_load(self, vid: int) -> int:
@@ -168,13 +258,14 @@ class RecordBufferPool:
         already owns a slot (racing loader won), returns that slot."""
         if self.is_resident(vid):
             return self._slot_of(vid)
-        slot = self._acquire_slot()
+        slot = self._acquire_slot(vid)
         if slot < 0:
             return -1
         self.state[slot] = SlotState.LOCKED
         self.slot_vid[slot] = vid
         self.slots[slot] = None
         self.record_map[vid] = RESIDENT_BIT | np.uint64(slot)
+        self._claim(slot, vid)
         return slot
 
     def finish_load(self, vid: int, record: object) -> int:
@@ -207,6 +298,7 @@ class RecordBufferPool:
         self.slot_vid[slot] = -1
         self.slots[slot] = None
         self.slot_group[slot] = 0
+        self._release(slot)
         self.state[slot] = SlotState.FREE
         self.free_list.append(slot)
 
@@ -236,13 +328,14 @@ class RecordBufferPool:
             if self.state[self._slot_of(vid)] == SlotState.LOCKED:
                 return self.finish_load(vid, record)
             return self._slot_of(vid)  # duplicate admit: keep first
-        slot = self._acquire_slot()
+        slot = self._acquire_slot(vid)
         if slot < 0:
             return -1
         self.state[slot] = SlotState.LOCKED
         self.slot_vid[slot] = vid
         self.slots[slot] = record
         self.record_map[vid] = RESIDENT_BIT | np.uint64(slot)
+        self._claim(slot, vid)
         self.state[slot] = SlotState.OCCUPIED
         return slot
 
@@ -280,7 +373,7 @@ class RecordBufferPool:
         self.group_slots[gid] = members
         admitted = 0
         for vid, record in todo:
-            slot = self._acquire_slot()
+            slot = self._acquire_slot(vid)
             if slot < 0:
                 break  # every slot LOCKED: the rest simply isn't cached
             self.state[slot] = SlotState.OCCUPIED
@@ -288,6 +381,7 @@ class RecordBufferPool:
             self.slots[slot] = record
             self.slot_group[slot] = gid
             self.record_map[vid] = RESIDENT_BIT | np.uint64(slot)
+            self._claim(slot, vid)
             members.append(slot)
             # re-link on every install: if the clock just evicted the LAST
             # earlier member, _evict_slot dropped the (then-empty) index
@@ -302,7 +396,17 @@ class RecordBufferPool:
             self.group_admits += 1
         return admitted
 
-    def _acquire_slot(self) -> int:
+    def _acquire_slot(self, vid: int = -1) -> int:
+        if self.tenant_cap is not None and vid >= 0:
+            t = self._tenant(vid)
+            if self.tenant_owned[t] >= self.tenant_cap[t]:
+                # soft quota: a tenant at its cap recycles its OWN slots
+                # (tenant-scoped second-chance sweep) instead of growing;
+                # nothing of its own evictable -> the admission is skipped
+                if not self._reclaim_from_tenant(t):
+                    self.quota_denials += 1
+                    return -1
+                return self.free_list.pop()
         if self.free_list:
             return self.free_list.pop()
         if not self.run_clock(target=1):
@@ -372,6 +476,7 @@ class RecordBufferPool:
             if not members:
                 del self.group_slots[gid]
         self.slot_group[slot] = 0
+        self._release(slot)
         self.state[slot] = SlotState.FREE
         self.free_list.append(slot)
         self.evictions += 1
@@ -392,30 +497,48 @@ class RecordBufferPool:
             "coalesced_record_loads": self.coalesced_record_loads,
             "group_admits": self.group_admits,
             "clock_skips": self.clock_skips,
+            "quota_reclaims": self.quota_reclaims,
+            "quota_denials": self.quota_denials,
         }
 
     def reset_stats(self) -> None:
         self.hits = self.misses = self.evictions = 0
         self.lock_waits = self.coalesced_record_loads = 0
         self.group_admits = self.clock_skips = 0
+        self.quota_reclaims = self.quota_denials = 0
 
     def check_invariants(self) -> None:
         """Structural invariants (exercised by hypothesis tests):
         every resident vid's slot points back at it; free slots hold nothing;
         occupancy + free == n_slots; LOCKED slots carry no record yet and are
-        the only ones allowed parked waiters."""
+        the only ones allowed parked waiters; per-tenant quota accounting
+        matches actual slot ownership exactly."""
         assert len(self.free_list) == (self.state == SlotState.FREE).sum()
+        owned_recount = np.zeros(self.n_tenants, dtype=np.int64)
         for s in range(self.n_slots):
             st = self.state[s]
             if st == SlotState.FREE:
                 assert self.slots[s] is None and self.slot_vid[s] == -1
                 assert self.slot_group[s] == 0
+                assert self.slot_tenant[s] == -1
             else:
                 vid = int(self.slot_vid[s])
                 assert vid >= 0
                 assert self.record_map[vid] == (RESIDENT_BIT | np.uint64(s))
+                assert self.slot_tenant[s] == self._tenant(vid)
+                owned_recount[self.slot_tenant[s]] += 1
                 if st == SlotState.LOCKED:
                     assert self.slots[s] is None  # record not published yet
+        # quota accounting == slot ownership, after every operation
+        assert (owned_recount == self.tenant_owned).all(), (
+            owned_recount, self.tenant_owned
+        )
+        for t in range(self.n_tenants):
+            assert self.tenant_slots[t] == {
+                s for s in range(self.n_slots) if self.slot_tenant[s] == t
+            }, f"tenant {t} slot index out of sync"
+        if self.tenant_cap is not None:
+            assert (self.tenant_owned <= self.tenant_cap).all()
         resident = (self.record_map & RESIDENT_BIT) != 0
         assert int(resident.sum()) == self.occupancy()
         # waiter lists exist only for vids inside an open LOCKED window

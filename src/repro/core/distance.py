@@ -138,6 +138,14 @@ class ScoreRequest:
       "full"     — exact fp32 distances; payload = (m, d) vector matrix
     ``flop_s`` is the per-row arithmetic cost in simulated seconds (WITHOUT the
     dispatch overhead — the engine charges one amortized dispatch per flush).
+
+    ``qb`` names the quantized table the id payload indexes (the tenant tag of
+    the multi-tenant serving plane): requests from different indexes sharing
+    one engine each carry their own table, and ``execute_requests`` routes
+    each (kind, table) group to its own fused call.  ``qb=None`` falls back to
+    the engine-level default — the single-system wire format, bitwise
+    unchanged.  ``tenant`` is a purely diagnostic tag (``WorkloadStats.
+    cross_tenant_flushes`` counts flushes spanning more than one).
     """
 
     kind: str
@@ -146,6 +154,10 @@ class ScoreRequest:
     pq: object = None                 # PreparedQuery ("estimate" / "refine")
     payload: object = None
     query: np.ndarray | None = None   # fp32 query vector ("full")
+    qb: object = None                 # QuantizedBase the ids resolve against
+                                      # (None -> engine default; serving plane
+                                      # sets the tenant's registered table)
+    tenant: int = 0                   # serving-plane tenant id (diagnostic)
 
 
 class DistanceEngine:
@@ -773,45 +785,65 @@ def get_engine(name: str | None = None, resident: bool = True) -> DistanceEngine
     raise ValueError(f"unknown distance backend {name!r}; expected {BACKENDS}")
 
 
+def request_group_key(req: ScoreRequest, default_qb: QuantizedBase | None):
+    """The dispatch-group key of one score request: requests sharing a key are
+    served by ONE fused engine call.  Quantized kinds group by (kind, table) —
+    the serving plane's cross-index routing: ids from different registered
+    tables cannot be gathered by one kernel launch, so each table gets its own
+    dispatch (tenants sharing a combined table still fuse into one).  ``full``
+    requests group by vector dimensionality so a cross-tenant flush never
+    concatenates mismatched matrices.  Single-system runs have one table and
+    one dim, so the grouping degenerates to the per-kind PR-2 rule, bitwise.
+    """
+    kind = req.kind
+    if kind == "refine" and isinstance(req.payload, tuple):
+        kind = "refine_rows"  # materialized host-gather wire format
+    if kind == "full":
+        return (kind, int(np.asarray(req.payload).shape[1]))
+    qb = req.qb if req.qb is not None else default_qb
+    return (kind, id(qb))
+
+
 def execute_requests(
     engine: DistanceEngine, qb: QuantizedBase | None, reqs: list[ScoreRequest]
 ) -> list[np.ndarray]:
     """Execute a rendezvous batch of score requests: ONE fused engine call per
-    request kind present, results returned in request order.
+    dispatch group present (``request_group_key``), results returned in
+    request order.
 
     This is the engine scheduler's flush primitive: requests from different
     coroutines (different queries — with the shared rendezvous, on different
-    workers) sharing a kind are stacked and dispatched together — the Pallas
-    wrappers are (B, N)-shaped, so one kernel launch serves every query in
-    the batch.  ``refine`` requests carry vertex-id arrays (resident path,
-    resolved against the engine's registered tables) or materialized
-    (codes, lo, step) tuples (host-gather parity path); the two are never
-    mixed within one system but may be mixed within one flush.
+    workers; on the serving plane, from different tenants) sharing a group are
+    stacked and dispatched together — the Pallas wrappers are (B, N)-shaped,
+    so one kernel launch serves every query in the batch.  ``refine`` requests
+    carry vertex-id arrays (resident path, resolved against the request's —
+    or the engine-default — registered table) or materialized (codes, lo,
+    step) tuples (host-gather parity path); the two are never mixed within
+    one system but may be mixed within one flush.
     """
     out: list = [None] * len(reqs)
-    by_kind: dict[str, list[int]] = {}
+    groups: dict[tuple, list[int]] = {}
     for i, r in enumerate(reqs):
-        kind = r.kind
-        if kind == "refine" and isinstance(r.payload, tuple):
-            kind = "refine_rows"  # materialized host-gather wire format
-        by_kind.setdefault(kind, []).append(i)
-    if qb is None and (by_kind.keys() - {"full"}):
-        raise ValueError(
-            "score requests of kind 'estimate'/'refine' need the QuantizedBase: "
-            "pass qb= to the Engine / run_workload executing these coroutines"
-        )
-    for kind, idxs in by_kind.items():
+        groups.setdefault(request_group_key(r, qb), []).append(i)
+    for (kind, _), idxs in groups.items():
+        gqb = reqs[idxs[0]].qb if reqs[idxs[0]].qb is not None else qb
+        if gqb is None and kind != "full":
+            raise ValueError(
+                "score requests of kind 'estimate'/'refine' need a "
+                "QuantizedBase: set ScoreRequest.qb or pass qb= to the "
+                "Engine / run_workload executing these coroutines"
+            )
         if kind == "estimate":
             res = engine.estimate_many(
-                qb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
+                gqb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
             )
         elif kind == "refine":
             res = engine.refine_ids_many(
-                qb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
+                gqb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
             )
         elif kind == "refine_rows":
             res = engine.refine_many(
-                qb, [(reqs[i].pq, *reqs[i].payload) for i in idxs]
+                gqb, [(reqs[i].pq, *reqs[i].payload) for i in idxs]
             )
         elif kind == "full":
             res = engine.refine_full_many(

@@ -52,7 +52,25 @@ in-flight queries.  With one worker the flush points and charges coincide
 with the per-worker topology, so results are bitwise identical; the engine
 also charges a one-time ``CostModel.table_upload_s`` at the first quantized
 dispatch of a run — the register-once pin of the index's resident code
-tables on the distance engine (see core.distance).
+tables on the distance engine (see core.distance), once per DISTINCT table
+(the multi-tenant serving plane registers one table per tenant, or one
+combined table for all of them).
+
+Flush/I-O overlap (``EngineConfig.overlap_flush``, shared rendezvous only):
+when every worker is stalled and a completion belonging to ANOTHER worker is
+already due, the stall flush is issued immediately — the fused dispatch
+overlaps with that worker's I/O drain — instead of first applying the
+completion and letting its coroutine run ahead of the flush.  The
+initiator's own due completions are always applied first (at one worker
+every completion is its own, so the flag cannot change one-worker results —
+the existing bitwise-parity contract).  ``WorkloadStats.overlap_flushes``
+counts the flushes that engaged the overlap.
+
+Multi-tenant serving (core.serving): score requests carry the registered
+table they index (``ScoreRequest.qb``) and a diagnostic tenant tag; the
+flush core groups by ``distance.request_group_key`` so one rendezvous flush
+routes each (kind, table) group to its own fused call —
+``WorkloadStats.cross_tenant_flushes`` counts flushes spanning tenants.
 """
 
 from __future__ import annotations
@@ -78,6 +96,11 @@ class EngineConfig:
     shared_rendezvous: bool = False  # one system-wide rendezvous buffer
                                      # (off = per-worker buffers, PR-2
                                      # semantics; needs fuse)
+    overlap_flush: bool = False  # overlap the shared-rendezvous stall flush
+                                 # with ANOTHER worker's in-flight completions
+                                 # (off = drain the I/O first; at one worker
+                                 # every completion is the initiator's own, so
+                                 # the flag cannot change results there)
 
 
 class _Worker:
@@ -228,35 +251,48 @@ class Engine:
                     worker.ready.append((gen, value, qid, True))
 
         # one-time resident-table pin: the first dispatch of a run that
-        # touches the quantized index charges the register-once upload of its
-        # code tables to the distance engine (core.distance.register_index)
-        upload_charged = False
+        # touches a quantized index charges the register-once upload of its
+        # code tables to the distance engine (core.distance.register_index).
+        # One charge per DISTINCT table — a single-tenant run charges exactly
+        # once (the PR-4 rule); the serving plane charges once per registered
+        # tenant table (once total when the tenants share a combined table).
+        uploaded_tables: set[int] = set()
 
         def charge_upload(w: _Worker, reqs) -> None:
-            nonlocal upload_charged
-            if upload_charged or self.qb is None:
-                return
-            if any(r.kind in ("estimate", "refine") for r in reqs):
-                upload_charged = True
-                w.t += self.cost.table_upload_s
+            for r in reqs:
+                if r.kind not in ("estimate", "refine"):
+                    continue
+                qb = r.qb if r.qb is not None else self.qb
+                if qb is not None and id(qb) not in uploaded_tables:
+                    uploaded_tables.add(id(qb))
+                    w.t += self.cost.table_upload_s
 
         def dispatch_batch(initiator: _Worker, reqs: list) -> list:
             """The flush core both rendezvous topologies share: one fused
-            dispatch per request kind present, each charged a single
-            amortized ``batch_dispatch_s`` to the initiating worker (plus the
-            one-time table upload), stats updated.  Returns the per-request
-            results.  Keeping this in ONE place is what guarantees the
-            1-worker bitwise parity between the topologies."""
+            dispatch per request group present (``distance.request_group_key``
+            — per kind, and per registered table across tenants), each charged
+            a single amortized ``batch_dispatch_s`` to the initiating worker
+            (plus the one-time table uploads), stats updated.  Returns the
+            per-request results.  Keeping this in ONE place is what guarantees
+            the 1-worker bitwise parity between the topologies."""
             charge_upload(initiator, reqs)
-            flop_by_kind: dict[str, float] = {}
+            flop_by_group: dict[tuple, float] = {}
+            tenants_by_group: dict[tuple, set] = {}
             for r in reqs:
-                flop_by_kind[r.kind] = flop_by_kind.get(r.kind, 0.0) + r.flop_s
-            for flop_s in flop_by_kind.values():
+                key = distance_mod.request_group_key(r, self.qb)
+                flop_by_group[key] = flop_by_group.get(key, 0.0) + r.flop_s
+                tenants_by_group.setdefault(key, set()).add(r.tenant)
+            for flop_s in flop_by_group.values():
                 initiator.t += self.cost.fused_batch_s(flop_s)
             outs = distance_mod.execute_requests(self.dist, self.qb, reqs)
-            stats.score_flushes += len(flop_by_kind)
+            stats.score_flushes += len(flop_by_group)
             stats.score_requests += len(reqs)
             stats.score_rows += sum(r.rows for r in reqs)
+            # cross-tenant FUSION means one dispatch group genuinely spanned
+            # tenants — a flush whose per-tenant requests were routed to
+            # separate per-table calls does not count
+            if any(len(ts) > 1 for ts in tenants_by_group.values()):
+                stats.cross_tenant_flushes += 1
             return outs
 
         def flush_scores(w: _Worker) -> None:
@@ -331,6 +367,7 @@ class Engine:
                     latency = w.t - start_time[qid]
                     stats.sum_latency_s += latency
                     stats.latencies.append(latency)
+                    stats.latency_qids.append(qid)
                     drop_query_tokens(qid)
                     w.active -= 1
                     w.done_queries += 1
@@ -409,7 +446,12 @@ class Engine:
                     value = tokens
                 elif kind == "wait_any":
                     tokens = op[1]
-                    tok = min(tokens, key=lambda tk: token_info[tk][1])
+                    # ties on completion time break by token id (submission
+                    # order), NOT set iteration order — the relative order of
+                    # one query's tokens is the same whether its engine is
+                    # isolated or shared with other tenants (serving-plane
+                    # isolation contract)
+                    tok = min(tokens, key=lambda tk: (token_info[tk][1], tk))
                     pid, comp = token_info.pop(tok)
                     toks = tokens_by_query.get(qid)
                     if toks is not None:
@@ -451,10 +493,37 @@ class Engine:
                     contributors.values(), key=lambda x: (x.t, x.wid)
                 )
                 if next_event_t is not None and next_event_t <= initiator.t:
-                    # completions already due would have been applied before a
-                    # per-worker flush action; apply them and re-evaluate —
-                    # a resumed coroutine runs before the rendezvous flushes
-                    apply_due_events(initiator.t)
+                    def initiator_due() -> bool:
+                        # ANY due completion of the initiator's own forces the
+                        # apply-first path — the overlap never reorders the
+                        # initiator's own completions past its flush
+                        for time, _, kind, payload in events:
+                            if time > initiator.t:
+                                continue
+                            wkr = payload[2] if kind == "callback" else payload[0]
+                            if wkr is initiator:
+                                return True
+                        return False
+
+                    if not cfg.overlap_flush or initiator_due():
+                        # completions already due would have been applied
+                        # before a per-worker flush action; apply them and
+                        # re-evaluate — a resumed coroutine runs before the
+                        # rendezvous flushes.  The overlap path never reorders
+                        # the initiator's OWN completions past its flush — at
+                        # one worker every completion is the initiator's, so
+                        # overlap on/off is bitwise identical there (the
+                        # existing 1-worker parity contract).
+                        apply_due_events(initiator.t)
+                        continue
+                    # overlap the flush with the I/O drain: ANOTHER worker's
+                    # completion is in flight — issue the fused dispatch now
+                    # instead of after applying it; the completion drains
+                    # while the dispatch executes and is applied by the next
+                    # scheduling round at its own completion time.
+                    stats.overlap_flushes += 1
+                    flush_shared(initiator)
+                    drain_pool_resumes(initiator.t)
                     continue
                 # flush, then continue the initiator in the same breath: its
                 # first coroutine resumes straight out of the fused dispatch
@@ -487,6 +556,7 @@ def run_workload(
     fuse: bool = False,
     fuse_rows: int = 256,
     shared_rendezvous: bool = False,
+    overlap_flush: bool = False,
 ) -> tuple[list, WorkloadStats]:
     """Convenience wrapper: build an engine, run all queries, return results+stats."""
     engine = Engine(
@@ -496,6 +566,7 @@ def run_workload(
         config=EngineConfig(
             n_workers=n_workers, batch_size=batch_size, page_size=page_size,
             fuse=fuse, fuse_rows=fuse_rows, shared_rendezvous=shared_rendezvous,
+            overlap_flush=overlap_flush,
         ),
         dist=dist,
         qb=qb,

@@ -83,10 +83,20 @@ class SearchContext:
     # against the engine's registered tables (False = PR-2 semantics, the
     # coroutine materializes code matrices from the fetched payload bytes)
     resident_ids: bool = True
+    # multi-tenant serving plane (core.serving): score requests are tagged
+    # with the registered table their ids index and with the tenant id, and
+    # id payloads are shifted into the plane's global vid namespace.  The
+    # single-system defaults (own table, offset 0, tenant 0) leave the wire
+    # format bitwise unchanged.
+    table_qb: object | None = None  # table requests index (None -> qb)
+    vid_base: int = 0               # offset into the combined-table rows
+    tenant: int = 0                 # tenant tag on every score op
 
     def __post_init__(self):
         if self.dist is None:
             self.dist = distance_mod.get_engine()
+        if self.table_qb is None:
+            self.table_qb = self.qb
 
 
 @dataclasses.dataclass
@@ -400,12 +410,17 @@ def _estimate_scores(ctx: SearchContext, pq, ids: list[int]):
     """Yield one level-1 score op for ``ids``; returns the estimate array.
     The engine charges the batch's flops plus an amortized dispatch — shared
     with other queries' frontiers when cross-query fusion is on."""
+    payload = np.asarray(ids, dtype=np.int64)
+    if ctx.vid_base:
+        payload = payload + ctx.vid_base  # rows in the combined serving table
     req = distance_mod.ScoreRequest(
         kind="estimate",
         rows=len(ids),
         flop_s=ctx.cost.estimate(len(ids), ctx.qb.dim),
         pq=pq,
-        payload=np.asarray(ids, dtype=np.int64),
+        payload=payload,
+        qb=ctx.table_qb,
+        tenant=ctx.tenant,
     )
     ests = yield ("score", req)
     return ests
@@ -417,6 +432,8 @@ def _refine_records(ctx: SearchContext, pq, recs: list):
     quantized index the request carries only vertex ids (the engine owns the
     resident level-2 table) unless ``ctx.resident_ids`` is off."""
     kind, payload = ctx.index.refine_payload(recs, resident=ctx.resident_ids)
+    if kind == "refine" and ctx.vid_base and not isinstance(payload, tuple):
+        payload = payload + ctx.vid_base  # rows in the combined serving table
     req = distance_mod.ScoreRequest(
         kind=kind,
         rows=len(recs),
@@ -424,6 +441,8 @@ def _refine_records(ctx: SearchContext, pq, recs: list):
         pq=pq,
         payload=payload,
         query=pq.q_orig if kind == "full" else None,
+        qb=ctx.table_qb if kind != "full" else None,
+        tenant=ctx.tenant,
     )
     dists = yield ("score", req)
     return dists
@@ -695,6 +714,7 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
             flop_s=vectors.shape[0] * cost.refine_full(d),
             payload=vectors,
             query=np.asarray(q, dtype=np.float32),
+            tenant=ctx.tenant,
         )
         out = yield ("score", req)
         return out

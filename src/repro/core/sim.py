@@ -102,6 +102,9 @@ class WorkloadStats:
     makespan_s: float = 0.0
     sum_latency_s: float = 0.0
     latencies: list[float] = dataclasses.field(default_factory=list)
+    # query id of each ``latencies`` entry (completion order) — lets a
+    # multi-tenant caller split the latency distribution by tenant
+    latency_qids: list[int] = dataclasses.field(default_factory=list)
     io_count: int = 0
     io_bytes: int = 0
     coalesced_reads: int = 0   # reads served by an already in-flight page (no SQE)
@@ -112,10 +115,20 @@ class WorkloadStats:
     coalesced_record_loads: int = 0  # parked waiters served by another's load
     group_admits: int = 0            # co-resident groups admitted in one clock
     clock_skips: int = 0             # clock steps that landed on LOCKED slots
+    # per-tenant admission quotas (multi-tenant shared pool)
+    quota_reclaims: int = 0          # slots an over-quota tenant took from itself
+    quota_denials: int = 0           # slot acquisitions denied at the tenant
+                                     # cap (nothing of the tenant's own was
+                                     # evictable; an uncached demand admission
+                                     # can contribute more than one)
     # cross-query fused score dispatch (engine rendezvous buffer)
     score_flushes: int = 0     # fused kernel dispatches issued by the engine
     score_requests: int = 0    # per-coroutine score ops absorbed by those flushes
     score_rows: int = 0        # total distance rows across all flushes
+    cross_tenant_flushes: int = 0  # rendezvous flushes whose requests spanned
+                                   # more than one tenant (serving plane)
+    overlap_flushes: int = 0   # shared-rendezvous flushes issued while another
+                               # worker's completions were still in flight
 
     @property
     def qps(self) -> float:

@@ -272,3 +272,131 @@ def test_hit_rate_tracks_skew():
             pool.admit(vid, f"r{vid}")
     # second chance keeps the hot set pinned: most hot accesses hit
     assert pool.hit_rate() > 0.6
+
+
+# ------------------------------------------------- multi-tenant soft quotas
+# Deterministic replays of the quota rules (the hypothesis state machine in
+# tests/test_bufferpool_stateful.py drives the same surface randomly; these
+# pin the semantics in an environment without hypothesis).
+
+
+def make_tenant_pool(n_slots=8, n_records=64, n_tenants=2, quota=None, **kw):
+    vid_to_page = np.arange(n_records) // 4
+    tenant_of = np.arange(n_records) % n_tenants  # vids round-robin tenants
+    return RecordBufferPool(n_slots, vid_to_page, tenant_of=tenant_of,
+                            tenant_quota=quota, **kw)
+
+
+def test_quota_off_accounting_matches_ownership():
+    """With no quota the policy is the pure global clock, but the ownership
+    bookkeeping still tracks every claim/release exactly."""
+    pool = make_tenant_pool(n_slots=4, quota=None)
+    for vid in (0, 2, 4, 1, 3, 6, 8):  # evens tenant 0, odds tenant 1
+        pool.admit(vid, f"r{vid}")
+        pool.check_invariants()
+    assert pool.tenant_cap is None
+    assert int(pool.tenant_owned.sum()) == pool.occupancy()
+    # one tenant may own the whole pool: no cap binds
+    pool2 = make_tenant_pool(n_slots=4, quota=None)
+    for vid in (0, 2, 4, 6):
+        pool2.admit(vid, f"r{vid}")
+    assert pool2.tenant_owned[0] == 4 and pool2.tenant_owned[1] == 0
+    pool2.check_invariants()
+
+
+def test_quota_caps_tenant_and_reclaims_own_slots():
+    """At its cap a tenant recycles its OWN slots (tenant-scoped second
+    chance): the oldest own record leaves, the other tenant is untouched."""
+    pool = make_tenant_pool(n_slots=4, quota=0.5)  # cap = 2 slots per tenant
+    pool.admit(0, "r0")
+    pool.admit(2, "r2")     # tenant 0 at cap
+    pool.admit(1, "r1")     # tenant 1 under cap
+    pool.check_invariants()
+    assert pool.admit(4, "r4") >= 0   # tenant 0 over cap: reclaims own
+    pool.check_invariants()
+    assert pool.tenant_owned[0] == 2  # still at cap, not above
+    assert pool.quota_reclaims == 1
+    assert pool.lookup(1) == "r1"     # tenant 1 untouched
+    assert pool.lookup(4) == "r4"     # the new record is cached
+    # one of tenant 0's earlier records was the reclaim victim
+    assert (pool.lookup(0) is None) or (pool.lookup(2) is None)
+
+
+def test_quota_denial_when_own_slots_all_locked():
+    """A tenant at cap whose every slot sits in a LOCKED window cannot
+    reclaim: the admission is skipped (-1), never an eviction of a foreign
+    or LOCKED slot."""
+    pool = make_tenant_pool(n_slots=4, quota=0.5)
+    assert pool.begin_load(0) >= 0
+    assert pool.begin_load(2) >= 0    # tenant 0 at cap, both LOCKED
+    denials0 = pool.quota_denials
+    assert pool.admit(4, "r4") == -1
+    assert pool.quota_denials == denials0 + 1
+    assert pool.is_loading(0) and pool.is_loading(2)
+    pool.check_invariants()
+    # tenant 1 is unaffected by tenant 0's cap pressure
+    assert pool.admit(1, "r1") >= 0
+    pool.check_invariants()
+
+
+def test_quota_under_cap_uses_free_list_and_global_clock():
+    """Under its cap a tenant acquires slots exactly like the single-tenant
+    pool: free list first, then the global clock (which may evict another
+    tenant's cold slots — that is the sharing benefit)."""
+    pool = make_tenant_pool(n_slots=4, quota=0.75)  # cap = 3
+    for vid in (1, 3, 5):     # tenant 1 takes three slots
+        pool.admit(vid, f"r{vid}")
+    pool.admit(0, "r0")       # tenant 0: last free slot
+    pool.check_invariants()
+    assert pool.tenant_owned[0] == 1 and pool.tenant_owned[1] == 3
+    # pool full; tenant 0 under cap admits via the GLOBAL clock: some
+    # (cold) record of either tenant is evicted, ownership stays consistent
+    assert pool.admit(2, "r2") >= 0
+    pool.check_invariants()
+    assert pool.lookup(2) == "r2"
+    assert int(pool.tenant_owned.sum()) == pool.occupancy() == 4
+
+
+def test_quota_release_paths_decrement_ownership():
+    """abort_load and clock eviction both hand the slot back: ownership
+    follows the slot through every release path."""
+    pool = make_tenant_pool(n_slots=4, quota=0.5)
+    assert pool.begin_load(0) >= 0
+    assert pool.tenant_owned[0] == 1
+    pool.abort_load(0)
+    assert pool.tenant_owned[0] == 0
+    pool.check_invariants()
+    pool.admit(2, "r2")
+    pool.run_clock(target=1)  # demote
+    pool.run_clock(target=1)  # evict
+    assert pool.tenant_owned[0] == 0
+    pool.check_invariants()
+
+
+def test_quota_replay_mixed_ops_accounting_invariant():
+    """A fixed mixed-op replay (the deterministic pre-validation of the
+    stateful rules): after EVERY op, quota accounting matches actual slot
+    ownership and no cap is exceeded."""
+    pool = make_tenant_pool(n_slots=6, n_tenants=3, quota=0.34)  # cap = 2
+    ops = [
+        ("admit", 0), ("admit", 1), ("admit", 2), ("begin", 3),
+        ("admit", 6), ("finish", 3), ("admit", 9), ("clock", 2),
+        ("admit", 12), ("admit", 4), ("begin", 7), ("abort", 7),
+        ("admit", 5), ("group", (8, 11, 14)), ("clock", 3), ("admit", 15),
+        ("begin", 10), ("admit", 10), ("admit", 13), ("clock", 1),
+    ]
+    for op, arg in ops:
+        if op == "admit":
+            pool.admit(arg, f"r{arg}")
+        elif op == "begin":
+            pool.begin_load(arg)
+        elif op == "finish":
+            pool.finish_load(arg, f"l{arg}")
+        elif op == "abort":
+            pool.abort_load(arg)
+        elif op == "group":
+            pool.admit_group(list(arg), [f"g{v}" for v in arg])
+        else:
+            pool.run_clock(target=arg)
+        pool.check_invariants()
+        assert (pool.tenant_owned <= pool.tenant_cap).all()

@@ -40,6 +40,14 @@ def make_pool(n_slots=8, n_records=N_RECORDS, **kw):
     return RecordBufferPool(n_slots, vid_to_page, **kw)
 
 
+def make_tenant_pool(n_slots=8, n_records=N_RECORDS, n_tenants=3, quota=None,
+                     **kw):
+    vid_to_page = np.arange(n_records) // 4
+    tenant_of = np.arange(n_records) % n_tenants
+    return RecordBufferPool(n_slots, vid_to_page, tenant_of=tenant_of,
+                            tenant_quota=quota, **kw)
+
+
 # ------------------------------------------------------------ property tests
 
 
@@ -232,5 +240,91 @@ class PoolMachine(RuleBasedStateMachine):
 
 TestPoolMachine = PoolMachine.TestCase
 TestPoolMachine.settings = settings(
+    max_examples=60, stateful_step_count=50, deadline=None
+)
+
+
+# ------------------------------------------------ multi-tenant quota machine
+
+
+class TenantPoolMachine(RuleBasedStateMachine):
+    """Arbitrary interleavings of the pool API over a MULTI-TENANT pool with
+    soft quotas (the serving plane's shared pool): vids round-robin three
+    tenants, and after every rule the quota accounting must match actual slot
+    ownership exactly, with no tenant above its cap and no LOCKED slot ever
+    reclaimed by quota pressure.  Deterministic replays of the same rules
+    live in tests/test_bufferpool.py (the hypothesis-free pre-validation)."""
+
+    @initialize(
+        n_slots=st.integers(min_value=2, max_value=12),
+        quota=st.sampled_from([None, 0.25, 0.4, 0.6, 1.0]),
+        group_demote=st.booleans(),
+    )
+    def setup(self, n_slots, quota, group_demote):
+        self.pool = make_tenant_pool(
+            n_slots=n_slots, quota=quota, group_demote=group_demote
+        )
+        self.loading: set[int] = set()
+
+    @rule(vid=VIDS)
+    def lookup(self, vid):
+        self.pool.lookup(vid)
+
+    @rule(vid=VIDS)
+    def begin_load(self, vid):
+        absent = self.pool.status(vid) == "absent"
+        if self.pool.begin_load(vid) >= 0 and absent:
+            self.loading.add(vid)
+
+    @rule(vid=VIDS)
+    def finish_load(self, vid):
+        self.pool.finish_load(vid, f"load-{vid}")
+        self.loading.discard(vid)
+
+    @rule(vid=VIDS)
+    def abort_load(self, vid):
+        self.pool.abort_load(vid)
+        self.loading.discard(vid)
+
+    @rule(vid=VIDS)
+    def admit(self, vid):
+        self.pool.admit(vid, f"admit-{vid}")
+        self.loading.discard(vid)  # a demand admit publishes an open window
+
+    @rule(base=VIDS, width=st.integers(min_value=1, max_value=4))
+    def admit_group(self, base, width):
+        # co-resident groups come from ONE tenant's page: stride by the
+        # tenant count so every member maps to the same tenant
+        vids = [(base + 3 * i) % N_RECORDS for i in range(width)]
+        self.pool.admit_group(vids, [f"group-{v}" for v in vids])
+
+    @rule(target_n=st.integers(min_value=0, max_value=6))
+    def run_clock(self, target_n):
+        self.pool.run_clock(target=target_n)
+
+    @rule()
+    def drain_resumes(self):
+        self.pool.take_resumes()
+
+    @invariant()
+    def structural_and_quota_accounting(self):
+        # check_invariants recounts slot ownership per tenant and asserts it
+        # equals tenant_owned, and that no tenant exceeds its cap
+        self.pool.check_invariants()
+
+    @invariant()
+    def locked_windows_survive_quota_pressure(self):
+        for v in self.loading:
+            assert self.pool.is_loading(v), (
+                "an open LOCKED window was torn down by quota reclaim"
+            )
+
+    @invariant()
+    def ownership_totals(self):
+        assert int(self.pool.tenant_owned.sum()) == self.pool.occupancy()
+
+
+TestTenantPoolMachine = TenantPoolMachine.TestCase
+TestTenantPoolMachine.settings = settings(
     max_examples=60, stateful_step_count=50, deadline=None
 )

@@ -1,0 +1,141 @@
+"""Paged KV pool + cache-aware scheduler + paged_attention kernel integration."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.serving.kv_pool import PagedKVPool
+from repro.serving.scheduler import CacheAwareScheduler, ServeRequest
+
+RNG = np.random.default_rng(0)
+
+
+def test_append_and_block_tables():
+    pool = PagedKVPool(n_pages=8, page_size=4, kv_heads=2, head_dim=8)
+    pool.add_request(0)
+    for t in range(10):  # spans 3 pages
+        pool.append_token(0, RNG.standard_normal((2, 8)), RNG.standard_normal((2, 8)))
+    req = pool.requests[0]
+    assert req.context_len == 10
+    assert len(req.block_table) == 3
+    bt = pool.block_table_array(0, max_pages=4)
+    assert (bt[:3] >= 0).all()
+
+
+def test_eviction_spills_and_reloads_exactly():
+    pool = PagedKVPool(n_pages=4, page_size=2, kv_heads=1, head_dim=4)
+    pool.add_request(0)
+    kept = []
+    for t in range(8):  # needs 4 pages — fills the pool
+        k = RNG.standard_normal((1, 4)).astype(np.float32)
+        kept.append(k.copy())
+        pool.append_token(0, k, k)
+    pool.add_request(1)
+    pool.append_token(1, RNG.standard_normal((1, 4)), RNG.standard_normal((1, 4)))
+    assert pool.evictions >= 1
+    # some page of request 0 was swapped out; reload and verify bytes
+    req0 = pool.requests[0]
+    swapped = [lp for lp, pp in enumerate(req0.block_table) if pp < 0]
+    assert swapped
+    lp = swapped[0]
+    pp = pool.ensure_resident(0, lp)
+    np.testing.assert_array_equal(pool.k_pages[pp, 0], kept[lp * 2])
+    assert pool.swap_ins >= 1
+
+
+def test_second_chance_protects_hot_request():
+    pool = PagedKVPool(n_pages=4, page_size=2, kv_heads=1, head_dim=4)
+    pool.add_request(0)
+    pool.add_request(1)
+    for _ in range(4):
+        pool.append_token(0, np.ones((1, 4)), np.ones((1, 4)))  # 2 pages
+        pool.append_token(1, np.zeros((1, 4)), np.zeros((1, 4)))
+    # touch request 0's pages (hot), then force an eviction via request 2
+    for lp in range(len(pool.requests[0].block_table)):
+        pool.ensure_resident(0, lp)
+    pool.state[:] = 3  # MARK everything (one full sweep)
+    for lp in range(len(pool.requests[0].block_table)):
+        pool.ensure_resident(0, lp)  # second chance for request 0
+    pool.add_request(2)
+    pool.append_token(2, np.full((1, 4), 2.0), np.full((1, 4), 2.0))
+    assert all(p >= 0 for p in pool.requests[0].block_table), "hot request evicted"
+    assert any(p < 0 for p in pool.requests[1].block_table), "cold request kept"
+
+
+def test_scheduler_prefers_resident_requests():
+    pool = PagedKVPool(n_pages=6, page_size=2, kv_heads=1, head_dim=4)
+    sched = CacheAwareScheduler(pool, max_batch=2, age_boost=3)
+    for rid in range(3):
+        sched.submit(ServeRequest(rid=rid, prompt_len=4, max_new_tokens=6))
+    # admit and build contexts: rids 0,1 hot; rid 2 swapped out
+    batch = sched.next_batch()
+    for req in sched.running.values():
+        for _ in range(4):
+            pool.append_token(req.rid, np.ones((1, 4)), np.ones((1, 4)))
+    # force rid 2's pages out
+    for lp, pp in enumerate(pool.requests[2].block_table):
+        if pp >= 0:
+            pool.state[pp] = 3
+    pool.add_request(99)
+    pool.append_token(99, np.zeros((1, 4)), np.zeros((1, 4)))
+    batch = sched.next_batch()
+    rids = {r.rid for r in batch}
+    assert 2 not in rids or pool.residency_fraction(2) == 1.0
+    # starvation guard: within age_boost steps rid 2 must get scheduled
+    seen_2 = False
+    for _ in range(5):
+        batch = sched.next_batch()
+        seen_2 |= any(r.rid == 2 for r in batch)
+    assert seen_2
+
+
+def test_pool_drives_paged_attention_kernel():
+    """End-to-end: tokens appended through the pool, attention through the
+    Pallas kernel via the pool's block tables == dense reference."""
+    P_, page, KVH, Dh, B, H = 8, 4, 2, 16, 2, 4
+    pool = PagedKVPool(n_pages=P_, page_size=page, kv_heads=KVH, head_dim=Dh)
+    ctx = [7, 5]
+    dense_k = [np.zeros((c, KVH, Dh), np.float32) for c in ctx]
+    dense_v = [np.zeros((c, KVH, Dh), np.float32) for c in ctx]
+    for b in range(B):
+        pool.add_request(b)
+        for t in range(ctx[b]):
+            k = RNG.standard_normal((KVH, Dh)).astype(np.float32)
+            v = RNG.standard_normal((KVH, Dh)).astype(np.float32)
+            dense_k[b][t], dense_v[b][t] = k, v
+            pool.append_token(b, k, v)
+
+    max_pages = 2
+    bt = np.stack([pool.block_table_array(b, max_pages) for b in range(B)])
+    q = RNG.standard_normal((B, H, Dh)).astype(np.float32)
+    out = paged_attention(
+        jnp.asarray(q),
+        jnp.asarray(pool.k_pages), jnp.asarray(pool.v_pages),
+        jnp.asarray(bt), jnp.asarray(ctx, np.int32),
+    )
+    ref = paged_attention_ref(
+        jnp.asarray(q),
+        jnp.asarray(pool.k_pages), jnp.asarray(pool.v_pages),
+        jnp.asarray(bt, np.int32), jnp.asarray(ctx, np.int32),
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_serving_loop_completes_all_requests():
+    pool = PagedKVPool(n_pages=16, page_size=2, kv_heads=1, head_dim=4)
+    sched = CacheAwareScheduler(pool, max_batch=3)
+    for rid in range(7):
+        sched.submit(ServeRequest(rid=rid, prompt_len=2, max_new_tokens=4))
+    steps = 0
+    while not sched.idle and steps < 200:
+        batch = sched.next_batch()
+        for req in batch:  # "decode": append one token per scheduled request
+            pool.append_token(req.rid, np.ones((1, 4)), np.ones((1, 4)))
+        sched.complete_step(batch)
+        steps += 1
+    assert sched.idle
+    assert sorted(sched.completed) == list(range(7))
