@@ -9,6 +9,11 @@ overheads.  This module measures them:
   * dispatch  — per-call overhead of an id-based level-1 estimate, extracted
     by timing a 1-row call against a large call and subtracting the per-row
     slope (classic y = a + b*m fit at two points, min-of-reps);
+  * full dispatch — the same two-point fit over the exact fp32 path
+    (``refine_full``, the BLAS GEMV the DiskANN-style systems refine with):
+    a ufunc/GEMV launch is not priced like the int4 table kernel, so
+    ``CostModel.full_dispatch_s`` is calibrated apart from
+    ``batch_dispatch_s``;
   * row cost  — the slope itself (diagnostic: it should track the CostModel
     per-dim constants);
   * upload    — wall-clock of ``register_index`` on a fresh engine (the
@@ -40,7 +45,7 @@ from repro.core.quant import RabitQuantizer  # noqa: E402
 
 # CostModel fields the emitted overrides may set; everything else in the
 # record is diagnostic and ignored by baselines.apply_calibration.
-COST_FIELDS = ("batch_dispatch_s", "table_upload_s")
+COST_FIELDS = ("batch_dispatch_s", "full_dispatch_s", "table_upload_s")
 
 
 def _best_of(fn, reps: int) -> float:
@@ -77,6 +82,19 @@ def calibrate_backend(
     row_s = max(t_big - t_small, 0.0) / max(big - 1, 1)
     dispatch_s = max(t_small - row_s, 1e-9)
 
+    # same two-point fit over the exact fp32 path: refine_full is a dense
+    # GEMV over a materialized vector matrix, dispatched differently from
+    # the int4 table kernels (BLAS vs kernel launch)
+    q = rng.standard_normal(d).astype(np.float32)
+    vec_small = base[ids_small]
+    vec_big = base[ids_big]
+    eng.refine_full(q, vec_small)
+    eng.refine_full(q, vec_big)
+    tf_small = _best_of(lambda: eng.refine_full(q, vec_small), reps)
+    tf_big = _best_of(lambda: eng.refine_full(q, vec_big), reps)
+    full_row_s = max(tf_big - tf_small, 0.0) / max(big - 1, 1)
+    full_dispatch_s = max(tf_small - full_row_s, 1e-9)
+
     # time ONLY register_index (the table pin), not engine construction:
     # registration is idempotent per engine, so each rep needs a fresh engine
     # — built outside the timed region
@@ -90,8 +108,10 @@ def calibrate_backend(
     rec = {
         "backend": resolved,
         "batch_dispatch_s": dispatch_s,
+        "full_dispatch_s": full_dispatch_s,
         "table_upload_s": upload_s,
         "estimate_row_s": row_s,
+        "full_row_s": full_row_s,
         "n": n,
         "d": d,
         "big": big,
@@ -117,12 +137,14 @@ def run(quick: bool = True, backends: list[str] | None = None) -> dict:
 
     rows = [
         [name, rec["backend"], f"{rec['batch_dispatch_s'] * 1e6:.2f}",
+         f"{rec['full_dispatch_s'] * 1e6:.2f}",
          f"{rec['estimate_row_s'] * 1e9:.1f}",
          f"{rec['table_upload_s'] * 1e6:.1f}"]
         for name, rec in records.items()
     ]
     text = common.fmt_table(
-        ["backend", "resolved", "dispatch us", "row ns", "upload us"], rows
+        ["backend", "resolved", "dispatch us", "full us", "row ns",
+         "upload us"], rows
     )
 
     # sanity: the ordering argument of the paper — a kernel-launch dispatch
@@ -135,6 +157,9 @@ def run(quick: bool = True, backends: list[str] | None = None) -> dict:
         ),
         "upload_positive": all(
             r["table_upload_s"] > 0 for r in records.values()
+        ),
+        "full_dispatch_positive": all(
+            r["full_dispatch_s"] > 0 for r in records.values()
         ),
     }
     if "pallas" in records and records["pallas"]["backend"] == "pallas":

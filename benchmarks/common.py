@@ -49,6 +49,19 @@ def fuse_active() -> dict:
             "overlap_flush": baselines_mod.default_overlap_flush()}
 
 
+def set_hbm(on: bool, slots: int | None = None) -> None:
+    """Enable the device-resident HBM record-cache tier for every
+    record-pool system the benchmarks build (threads run.py's --hbm-tier /
+    --hbm-slots flags through SystemConfig)."""
+    baselines_mod.set_default_hbm(on, slots)
+
+
+def hbm_active() -> dict:
+    """The HBM-tier settings systems will actually get, for results.json."""
+    on, slots = baselines_mod.default_hbm()
+    return {"enabled": on, "slots": slots}
+
+
 def set_calibration(path: str) -> None:
     """Load calibrate.py's per-backend CostModel overrides and make every
     system the benchmarks build inherit them (run.py's --calibration flag)."""

@@ -2,7 +2,8 @@
 
   python -m benchmarks.run [--quick | --full] [--only NAME] [--backend NAME]
                            [--fuse] [--fuse-rows N] [--shared-rendezvous]
-                           [--overlap-flush] [--calibration PATH] [--strict]
+                           [--overlap-flush] [--hbm-tier] [--hbm-slots N]
+                           [--calibration PATH] [--strict]
 
 Writes benchmarks/out/results.json and prints each table with the paper
 claims it validates.  --strict exits non-zero when any module errors or any
@@ -66,6 +67,12 @@ def main():
                     help="overlap the shared-rendezvous stall flush with "
                          "other workers' in-flight completions (implies "
                          "--shared-rendezvous)")
+    ap.add_argument("--hbm-tier", action="store_true",
+                    help="device-resident HBM record-cache tier above the "
+                         "host pool for every record-pool system")
+    ap.add_argument("--hbm-slots", type=int, default=None,
+                    help="HBM tier slot count (default: match the host "
+                         "pool's slot count)")
     ap.add_argument("--calibration", default=None, metavar="PATH",
                     help="per-backend CostModel overrides from "
                          "benchmarks/calibrate.py (benchmarks/out/"
@@ -86,9 +93,13 @@ def main():
             shared=(args.shared_rendezvous or args.overlap_flush) or None,
             overlap=args.overlap_flush or None,
         )
+    if args.hbm_tier or args.hbm_slots is not None:
+        common.set_hbm(args.hbm_tier or args.hbm_slots is not None,
+                       args.hbm_slots)
     if args.calibration:
         common.set_calibration(args.calibration)
-    print(f"distance backend: {common.active_backend()}  fuse: {common.fuse_active()}")
+    print(f"distance backend: {common.active_backend()}  fuse: {common.fuse_active()}"
+          f"  hbm: {common.hbm_active()}")
 
     os.makedirs(common.OUT_DIR, exist_ok=True)
     results = {}
@@ -109,6 +120,7 @@ def main():
         # interpret vs compiled matters for pallas wall-clock comparisons
         res["pallas_interpret"] = common.pallas_mode()
         res["fuse"] = common.fuse_active()
+        res["hbm"] = common.hbm_active()
         res["calibration"] = args.calibration
         results[modname] = res
         print(f"\n=== {res.get('name', modname)}  ({dt:.1f}s) ===")

@@ -30,6 +30,7 @@ from repro.core import search as search_mod
 from repro.core.bufferpool import RecordBufferPool
 from repro.core.dataset import Dataset, recall_at_k
 from repro.core.engine import run_workload
+from repro.core.hbm import HbmTier
 from repro.core.pagecache import PageCache
 from repro.core.quant import QuantizedBase, RabitQuantizer
 from repro.core.search import (
@@ -48,6 +49,8 @@ _DEFAULT_FUSE_ROWS = 256
 _DEFAULT_SHARED_RV = False
 _DEFAULT_OVERLAP = False
 _DEFAULT_CALIBRATION: dict | None = None
+_DEFAULT_HBM = False
+_DEFAULT_HBM_SLOTS: int | None = None
 
 
 def set_default_fuse(
@@ -80,6 +83,20 @@ def default_shared_rendezvous() -> bool:
 
 def default_overlap_flush() -> bool:
     return _DEFAULT_OVERLAP
+
+
+def set_default_hbm(on: bool, slots: int | None = None) -> None:
+    """Process-wide default for the HBM record-cache tier — the hook
+    ``benchmarks/run.py --hbm-tier`` threads through.  ``slots`` fixes the
+    device slot count (None: match the host pool's slot count)."""
+    global _DEFAULT_HBM, _DEFAULT_HBM_SLOTS
+    _DEFAULT_HBM = bool(on)
+    if slots is not None:
+        _DEFAULT_HBM_SLOTS = int(slots)
+
+
+def default_hbm() -> tuple[bool, int | None]:
+    return _DEFAULT_HBM, _DEFAULT_HBM_SLOTS
 
 
 def set_default_calibration(calib: dict | None) -> None:
@@ -149,6 +166,12 @@ class SystemConfig:
     calibration: dict | str | None = None  # per-backend CostModel overrides
                                   # ({backend: {field: s}} or a path to
                                   # calibrate.py's JSON; None -> process default)
+    hbm_tier: bool | None = None  # device-resident record-cache tier above
+                                  # the host pool (None -> process default;
+                                  # only record-pool systems build one)
+    hbm_slots: int | None = None  # HBM tier slot count (None -> process
+                                  # default, which falls back to the host
+                                  # pool's slot count)
 
 
 @dataclasses.dataclass
@@ -162,6 +185,7 @@ class System:
     algorithm: object
     store: object
     cost: CostModel
+    hbm: object | None = None  # HbmTier when the device record tier is on
 
     def make_coroutine(self, qid: int, q: np.ndarray):
         return self.algorithm(self.ctx, q, self.config.params)
@@ -193,6 +217,7 @@ class System:
             fuse_rows=self.config.fuse_rows,
             shared_rendezvous=bool(self.config.shared_rendezvous),
             overlap_flush=bool(self.config.overlap_flush),
+            hbm=self.hbm,
         )
         hits, misses = self.ctx.accessor.stats()
         stats.cache_hits = hits - hits0
@@ -210,10 +235,15 @@ class System:
         return self.index.disk_bytes()
 
     def memory_bytes(self) -> int:
-        """Resident metadata + buffer budget (paper §5.3 footprint analysis)."""
-        return self.index.resident_bytes() + int(
+        """Resident metadata + buffer budget (paper §5.3 footprint analysis).
+        The HBM tier's slot arrays count toward the total so tiered and
+        host-only configurations compare at equal memory."""
+        total = self.index.resident_bytes() + int(
             self.config.buffer_ratio * self.index.disk_bytes()
         )
+        if self.hbm is not None:
+            total += self.hbm.nbytes()
+        return total
 
 
 # ----------------------------------------------------------------- builders
@@ -255,6 +285,12 @@ def build_system(
         overlap_flush=(
             default_overlap_flush()
             if config.overlap_flush is None else config.overlap_flush
+        ),
+        hbm_tier=(
+            default_hbm()[0] if config.hbm_tier is None else config.hbm_tier
+        ),
+        hbm_slots=(
+            default_hbm()[1] if config.hbm_slots is None else config.hbm_slots
         ),
     )
     cost = cost or CostModel()
@@ -357,6 +393,21 @@ def build_system(
         raise ValueError(f"unknown system {name!r}")
 
     config = dataclasses.replace(config, batch_size=batch)
+    hbm = None
+    if (
+        config.hbm_tier
+        and name != "inmemory"
+        and isinstance(acc, RecordAccessor)
+        and isinstance(index, VeloIndex)
+    ):
+        # second cache tier ABOVE the host pool: device slots holding full
+        # records; the accessor consults it first and the pool's publish
+        # hook drains the miss list into staged scatters
+        slots = config.hbm_slots or acc.pool.n_slots
+        hbm = HbmTier(qb, index.layout.vid_to_page,
+                      n_slots=max(8, min(int(slots), n)), R=graph.R)
+        acc.hbm = hbm
+        acc.pool.on_publish = hbm.note_publish
     ctx = SearchContext(
         index=index,
         qb=qb,
@@ -376,6 +427,7 @@ def build_system(
         algorithm=algo,
         store=index.store,
         cost=cost,
+        hbm=hbm,
     )
 
 
@@ -398,6 +450,12 @@ def evaluate(
         m = min(k, len(r.ids))
         ids[i, :m] = r.ids[:m]
     rec = recall_at_k(ids, ds.groundtruth, k)
+    # combined two-tier hit rate: an access is a hit if EITHER tier served it
+    # (tier misses fall through to the pool, so pool counters already exclude
+    # tier hits — the sum is disjoint)
+    served = stats.hbm_hits + stats.cache_hits
+    accesses = served + stats.cache_misses
+    combined = served / accesses if accesses else 0.0
     return {
         "system": system.name,
         "distance_backend": system.ctx.dist.name,
@@ -425,4 +483,11 @@ def evaluate(
         "resident_gathers": dist1.resident_gathers - dist0.resident_gathers,
         "score_requests_per_flush": stats.requests_per_flush,
         "score_rows_per_flush": stats.rows_per_flush,
+        "hbm_tier": system.hbm is not None,
+        "hbm_hits": stats.hbm_hits,
+        "hbm_misses": stats.hbm_misses,
+        "hbm_hit_rate": stats.hbm_hit_rate,
+        "hbm_scatters": stats.hbm_scatters,
+        "hbm_evictions": stats.hbm_evictions,
+        "combined_hit_rate": combined,
     }

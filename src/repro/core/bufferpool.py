@@ -74,9 +74,17 @@ class RecordBufferPool:
 
     def __init__(self, n_slots: int, vid_to_page: np.ndarray,
                  group_demote: bool = False, tenant_of: np.ndarray | None = None,
-                 tenant_quota: float | list | tuple | np.ndarray | None = None):
+                 tenant_quota: float | list | tuple | np.ndarray | None = None,
+                 on_publish=None):
         assert n_slots >= 1
         self.n_slots = n_slots
+        # publication hook: called as on_publish(vid, record) whenever a NEW
+        # record is actually installed — finish_load publishes, demand admits,
+        # and every member of a group admit.  Duplicate admits (keep-first) do
+        # not fire it.  The HBM record-cache tier subscribes here: this is the
+        # miss-list handoff that stages freshly loaded records for the next
+        # double-buffered scatter into device cache slots.
+        self.on_publish = on_publish
         self.disk_pages = np.asarray(vid_to_page, dtype=np.int64)  # immutable
         # record mapping array: initially every record is on disk at its page.
         self.record_map = self.disk_pages.astype(np.uint64) & PTR_MASK
@@ -284,6 +292,8 @@ class RecordBufferPool:
         for waiter in self.waiters.pop(vid, ()):
             self.coalesced_record_loads += 1
             self.pending_resumes.append((waiter, record))
+        if self.on_publish is not None:
+            self.on_publish(vid, record)
         return slot
 
     def abort_load(self, vid: int) -> None:
@@ -337,6 +347,8 @@ class RecordBufferPool:
         self.record_map[vid] = RESIDENT_BIT | np.uint64(slot)
         self._claim(slot, vid)
         self.state[slot] = SlotState.OCCUPIED
+        if self.on_publish is not None:
+            self.on_publish(vid, record)
         return slot
 
     def admit_group(self, vids, records) -> int:
@@ -388,6 +400,8 @@ class RecordBufferPool:
             # entry, and this slot's tag would otherwise dangle
             self.group_slots[gid] = members
             admitted += 1
+            if self.on_publish is not None:
+                self.on_publish(vid, record)
         if not members:
             # nothing survived (or nothing admitted); _evict_slot may already
             # have dropped the entry when it removed the last member

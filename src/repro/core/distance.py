@@ -109,6 +109,9 @@ class DistanceStats:
     # gathered from registered tables instead of caller-materialized matrices
     uploads: int = 0
     resident_gathers: int = 0
+    # HBM record-cache tier: rows refined by slot-indirection gathers from
+    # device cache slots (zero per-hop upload, like the resident table path)
+    slot_gathers: int = 0
 
     def dispatches(self) -> int:
         """Total kernel/ufunc dispatches issued by this engine instance."""
@@ -237,6 +240,57 @@ class DistanceEngine:
         self.stats.level2_calls += 1
         self.stats.level2_rows += codes.shape[0]
         return self._refine(qb, pq, codes, lo, step)
+
+    def refine_slots(
+        self, view, pq: PreparedQuery, slots: np.ndarray
+    ) -> np.ndarray:
+        """Level-2 refinement by HBM cache SLOT index: rows gather from the
+        tier's slot arrays (``cache_ext``/``cache_lo``/``cache_step``) rather
+        than the per-vid registered table — the slot-indirection sibling of
+        ``refine_ids``.  ``view`` is the tier handle (``core.hbm.HbmTier`` or
+        any object with ``qb``, ``gather(slots)`` and, for the device
+        backends, ``device_arrays()``)."""
+        slots = np.asarray(slots, dtype=np.int64)
+        if slots.size == 0:
+            return np.empty(0, dtype=np.float32)
+        self.stats.level2_calls += 1
+        self.stats.level2_rows += slots.size
+        self.stats.slot_gathers += slots.size
+        return self._refine_slots(view, pq, slots)
+
+    def refine_slots_many(
+        self, view, groups: list[tuple[PreparedQuery, np.ndarray]]
+    ) -> list[np.ndarray]:
+        """Fused slot-based level-2 refinement: ``groups`` is (pq, slots)."""
+        outs: list = [None] * len(groups)
+        live: list[tuple[int, PreparedQuery, np.ndarray]] = []
+        for i, (pq, slots) in enumerate(groups):
+            slots = np.asarray(slots, dtype=np.int64)
+            if slots.size == 0:
+                outs[i] = np.empty(0, dtype=np.float32)
+            else:
+                live.append((i, pq, slots))
+        if not live:
+            return outs
+        if len(live) == 1:
+            i, pq, slots = live[0]
+            outs[i] = self.refine_slots(view, pq, slots)
+            return outs
+        sizes = [slots.size for _, _, slots in live]
+        all_slots = np.concatenate([slots for _, _, slots in live])
+        self.stats.level2_calls += 1
+        self.stats.level2_rows += all_slots.size
+        self.stats.slot_gathers += all_slots.size
+        self.stats.fused_calls += 1
+        self.stats.fused_queries += len(live)
+        res = self._refine_slots_many(
+            view, [pq for _, pq, _ in live], sizes, all_slots
+        )
+        off = 0
+        for (i, _, _), m in zip(live, sizes):
+            outs[i] = np.asarray(res[off : off + m], dtype=np.float32)
+            off += m
+        return outs
 
     # ---- exact fp32 (DiskANN-style records, in-memory oracle) --------------
     def refine_full(self, q: np.ndarray, vectors: np.ndarray) -> np.ndarray:
@@ -411,6 +465,19 @@ class DistanceEngine:
     def _refine_ids_many(self, qb, tbl: ResidentView, pqs, sizes, ids) -> np.ndarray:
         codes, lo, step = tbl.gather_level2(ids)
         return self._refine_many(qb, pqs, sizes, codes, lo, step)
+
+    # ---- slot-based hooks over HBM cache slot arrays -----------------------
+    # Defaults gather the slot rows on the host and delegate to the matrix
+    # hooks; the pallas backend overrides them to gather from the tier's
+    # device mirror instead (zero upload — the slot-gather kernel path).
+
+    def _refine_slots(self, view, pq, slots) -> np.ndarray:
+        codes, lo, step = view.gather(slots)
+        return self._refine(view.qb, pq, codes, lo, step)
+
+    def _refine_slots_many(self, view, pqs, sizes, slots) -> np.ndarray:
+        codes, lo, step = view.gather(slots)
+        return self._refine_many(view.qb, pqs, sizes, codes, lo, step)
 
     # ---- subclass hooks ----------------------------------------------------
     def _estimate(self, qb, pq, codes, norms, ip_bar) -> np.ndarray:
@@ -711,6 +778,35 @@ class PallasEngine(BatchEngine):
         owner = np.repeat(np.arange(len(pqs)), sizes)
         return out[owner, np.arange(m)].astype(np.float32, copy=False)
 
+    # ---- slot-based paths: gather from the tier's device mirror ------------
+    # The slot-index vector is the only thing shipped per call; the slot
+    # arrays were uploaded once (and are maintained by the tier's scatter),
+    # so — like the resident id path — these do NOT count uploads.
+
+    def _refine_slots(self, view, pq, slots):
+        if not self.resident or view.qb.ext_bits != 4:
+            return super()._refine_slots(view, pq, slots)
+        _, gather_ref = _pallas_resident_fns()
+        ext, lo, step = view.device_arrays()
+        m, slotsp = self._pad_ids(slots)
+        out = gather_ref(
+            pq.qr[None, :], ext, lo, step, slotsp, interpret=self.interpret
+        )
+        return np.asarray(out[0, :m], dtype=np.float32)
+
+    def _refine_slots_many(self, view, pqs, sizes, slots):
+        if not self.resident or view.qb.ext_bits != 4:
+            return super()._refine_slots_many(view, pqs, sizes, slots)
+        _, gather_ref = _pallas_resident_fns()
+        ext, lo, step = view.device_arrays()
+        m, slotsp = self._pad_ids(slots)
+        Q = np.stack([pq.qr for pq in pqs])  # (B, d)
+        out = np.asarray(gather_ref(
+            Q, ext, lo, step, slotsp, interpret=self.interpret,
+        ))  # (B, mp)
+        owner = np.repeat(np.arange(len(pqs)), sizes)
+        return out[owner, np.arange(m)].astype(np.float32, copy=False)
+
     # ---- matrix paths: caller-gathered rows, re-uploaded per call ----------
 
     def _estimate(self, qb, pq, codes, norms, ip_bar):
@@ -805,7 +901,8 @@ def request_group_key(req: ScoreRequest, default_qb: QuantizedBase | None):
 
 
 def execute_requests(
-    engine: DistanceEngine, qb: QuantizedBase | None, reqs: list[ScoreRequest]
+    engine: DistanceEngine, qb: QuantizedBase | None, reqs: list[ScoreRequest],
+    hbm=None, splits: dict[int, tuple] | None = None,
 ) -> list[np.ndarray]:
     """Execute a rendezvous batch of score requests: ONE fused engine call per
     dispatch group present (``request_group_key``), results returned in
@@ -820,6 +917,14 @@ def execute_requests(
     or the engine-default — registered table) or materialized (codes, lo,
     step) tuples (host-gather parity path); the two are never mixed within
     one system but may be mixed within one flush.
+
+    ``hbm``/``splits`` thread the HBM record-cache tier through a flush:
+    ``splits`` maps ``id(req)`` of an id-payload refine request to the
+    (hit_mask, slot_indices) partition the engine resolved against the tier
+    (``HbmTier.peek_split``).  Hit rows gather from cache slots
+    (``refine_slots_many``, zero upload), miss rows take the ordinary
+    registered-table path, and each request's results are merged back in id
+    order.  With ``hbm=None`` (the default) the body below is untouched.
     """
     out: list = [None] * len(reqs)
     groups: dict[tuple, list[int]] = {}
@@ -838,9 +943,12 @@ def execute_requests(
                 gqb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
             )
         elif kind == "refine":
-            res = engine.refine_ids_many(
-                gqb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
-            )
+            if splits and any(id(reqs[i]) in splits for i in idxs):
+                res = _execute_refine_split(engine, gqb, hbm, reqs, idxs, splits)
+            else:
+                res = engine.refine_ids_many(
+                    gqb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
+                )
         elif kind == "refine_rows":
             res = engine.refine_many(
                 gqb, [(reqs[i].pq, *reqs[i].payload) for i in idxs]
@@ -854,3 +962,40 @@ def execute_requests(
         for i, r_ in zip(idxs, res):
             out[i] = r_
     return out
+
+
+def _execute_refine_split(
+    engine: DistanceEngine, gqb, hbm, reqs, idxs, splits
+) -> list[np.ndarray]:
+    """One refine dispatch group with HBM-tier residency splits: the miss
+    rows of every request fuse into one registered-table gather, the hit
+    rows into one slot gather, and each request's two result slices merge
+    back in its original id order."""
+    miss_groups: list[tuple] = []
+    hit_groups: list[tuple] = []
+    parts: list[tuple] = []  # (ids, mask | None) per request
+    for i in idxs:
+        r = reqs[i]
+        ids = np.asarray(r.payload, dtype=np.int64)
+        sp = splits.get(id(r))
+        if sp is None:
+            miss_groups.append((r.pq, ids))
+            hit_groups.append((r.pq, np.empty(0, dtype=np.int64)))
+            parts.append((ids, None))
+        else:
+            mask, slots = sp
+            miss_groups.append((r.pq, ids[~mask]))
+            hit_groups.append((r.pq, slots))
+            parts.append((ids, mask))
+    miss_res = engine.refine_ids_many(gqb, miss_groups)
+    hit_res = engine.refine_slots_many(hbm, hit_groups)
+    res: list[np.ndarray] = []
+    for (ids, mask), mr, hr in zip(parts, miss_res, hit_res):
+        if mask is None:
+            res.append(mr)
+            continue
+        merged = np.empty(len(ids), dtype=np.float32)
+        merged[~mask] = mr
+        merged[mask] = hr
+        res.append(merged)
+    return res

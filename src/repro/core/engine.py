@@ -129,6 +129,8 @@ class Engine:
         config: EngineConfig,
         dist=None,                  # DistanceEngine executing score ops
         qb=None,                    # QuantizedBase for estimate/refine kinds
+        hbm=None,                   # core.hbm.HbmTier: HBM record-cache tier
+                                    # (None == off, the bitwise-parity default)
     ):
         self.store = store
         self.ssd = ssd
@@ -136,6 +138,7 @@ class Engine:
         self.config = config
         self.dist = dist
         self.qb = qb
+        self.hbm = hbm
 
     def run(
         self,
@@ -150,6 +153,10 @@ class Engine:
         start_time: dict[int, float] = {}
         results: list = [None] * len(queries)
         stats = WorkloadStats(n_queries=len(queries))
+        # HBM tier counters are cumulative on the tier (it outlives runs, like
+        # the pool): snapshot at start, report per-run deltas at the end —
+        # the same rule PR 5 established for dist_uploads / pool pressure.
+        hbm_c0 = self.hbm.counters() if self.hbm is not None else None
 
         # global completion-event heap: (time, seq, kind, payload)
         events: list = []
@@ -267,24 +274,70 @@ class Engine:
                     uploaded_tables.add(id(qb))
                     w.t += self.cost.table_upload_s
 
+        def hbm_split(reqs) -> tuple[dict, dict]:
+            """Resolve each id-payload refine request against the HBM tier:
+            ``splits`` maps ``id(req)`` to its (hit_mask, slots) partition;
+            ``rebates`` accumulates, per dispatch group, the simulated seconds
+            the slot-gather saves over the registered-table refine (hit rows
+            are charged ``hbm_refine_ext`` instead of ``refine_ext``)."""
+            splits: dict[int, tuple] = {}
+            rebates: dict[tuple, float] = {}
+            for r in reqs:
+                if r.kind != "refine" or isinstance(r.payload, tuple):
+                    continue
+                rqb = r.qb if r.qb is not None else self.qb
+                if rqb is None or not self.hbm.covers(rqb):
+                    continue
+                sp = self.hbm.peek_split(np.asarray(r.payload, dtype=np.int64))
+                if sp is None:
+                    continue
+                mask, slots = sp
+                splits[id(r)] = (mask, slots)
+                key = distance_mod.request_group_key(r, self.qb)
+                per_row = max(
+                    0.0,
+                    self.cost.refine_ext(rqb.dim)
+                    - self.cost.hbm_refine_ext(rqb.dim),
+                )
+                rebates[key] = rebates.get(key, 0.0) + per_row * int(mask.sum())
+            return splits, rebates
+
         def dispatch_batch(initiator: _Worker, reqs: list) -> list:
             """The flush core both rendezvous topologies share: one fused
             dispatch per request group present (``distance.request_group_key``
             — per kind, and per registered table across tenants), each charged
-            a single amortized ``batch_dispatch_s`` to the initiating worker
-            (plus the one-time table uploads), stats updated.  Returns the
-            per-request results.  Keeping this in ONE place is what guarantees
-            the 1-worker bitwise parity between the topologies."""
+            a single amortized dispatch to the initiating worker (plus the
+            one-time table uploads), stats updated.  Returns the per-request
+            results.  Keeping this in ONE place is what guarantees the
+            1-worker bitwise parity between the topologies.
+
+            With the HBM tier on, refine requests are split against the cache
+            slots first (hit rows gather on-device at ``hbm_refine_ext`` cost,
+            charged as a rebate on the group's flops), and the scatter DMA
+            installing the records staged since the LAST boundary overlaps
+            this flush's fused dispatch: only ``hbm_scatter_s`` net of the
+            dispatch time is charged (double buffering — compute step t hides
+            the installs for step t+1)."""
             charge_upload(initiator, reqs)
+            splits = rebates = None
+            if self.hbm is not None:
+                splits, rebates = hbm_split(reqs)
             flop_by_group: dict[tuple, float] = {}
             tenants_by_group: dict[tuple, set] = {}
             for r in reqs:
                 key = distance_mod.request_group_key(r, self.qb)
                 flop_by_group[key] = flop_by_group.get(key, 0.0) + r.flop_s
                 tenants_by_group.setdefault(key, set()).add(r.tenant)
-            for flop_s in flop_by_group.values():
-                initiator.t += self.cost.fused_batch_s(flop_s)
-            outs = distance_mod.execute_requests(self.dist, self.qb, reqs)
+            dispatch_s = 0.0
+            for key, flop_s in flop_by_group.items():
+                if rebates:
+                    flop_s = max(0.0, flop_s - rebates.get(key, 0.0))
+                d = self.cost.fused_batch_s(flop_s, kind=key[0])
+                initiator.t += d
+                dispatch_s += d
+            outs = distance_mod.execute_requests(
+                self.dist, self.qb, reqs, hbm=self.hbm, splits=splits
+            )
             stats.score_flushes += len(flop_by_group)
             stats.score_requests += len(reqs)
             stats.score_rows += sum(r.rows for r in reqs)
@@ -293,6 +346,8 @@ class Engine:
             # separate per-table calls does not count
             if any(len(ts) > 1 for ts in tenants_by_group.values()):
                 stats.cross_tenant_flushes += 1
+            if self.hbm is not None and self.hbm.scatter_staged():
+                initiator.t += max(0.0, self.cost.hbm_scatter_s - dispatch_s)
             return outs
 
         def flush_scores(w: _Worker) -> None:
@@ -399,10 +454,25 @@ class Engine:
                         return  # parked in the rendezvous buffer
                     # fusion off: execute immediately (per-query dispatch)
                     charge_upload(w, (req,))
-                    w.t += self.cost.fused_batch_s(req.flop_s)
-                    value = distance_mod.execute_requests(
-                        self.dist, self.qb, [req]
-                    )[0]
+                    if self.hbm is not None:
+                        splits, rebates = hbm_split([req])
+                        key = distance_mod.request_group_key(req, self.qb)
+                        flop_s = max(
+                            0.0, req.flop_s - rebates.get(key, 0.0)
+                        ) if rebates else req.flop_s
+                        d = self.cost.fused_batch_s(flop_s, kind=key[0])
+                        w.t += d
+                        value = distance_mod.execute_requests(
+                            self.dist, self.qb, [req],
+                            hbm=self.hbm, splits=splits,
+                        )[0]
+                        if self.hbm.scatter_staged():
+                            w.t += max(0.0, self.cost.hbm_scatter_s - d)
+                    else:
+                        w.t += self.cost.fused_batch_s(req.flop_s)
+                        value = distance_mod.execute_requests(
+                            self.dist, self.qb, [req]
+                        )[0]
                 elif kind == "load_wait":
                     _, vid, pool = op
                     if pool.is_loading(vid):
@@ -539,6 +609,12 @@ class Engine:
                 break
 
         stats.makespan_s = max((w.t for w in workers), default=0.0)
+        if hbm_c0 is not None:
+            c1 = self.hbm.counters()
+            stats.hbm_hits = c1["hits"] - hbm_c0["hits"]
+            stats.hbm_misses = c1["misses"] - hbm_c0["misses"]
+            stats.hbm_scatters = c1["scatters"] - hbm_c0["scatters"]
+            stats.hbm_evictions = c1["evictions"] - hbm_c0["evictions"]
         return results, stats
 
 
@@ -557,6 +633,7 @@ def run_workload(
     fuse_rows: int = 256,
     shared_rendezvous: bool = False,
     overlap_flush: bool = False,
+    hbm=None,
 ) -> tuple[list, WorkloadStats]:
     """Convenience wrapper: build an engine, run all queries, return results+stats."""
     engine = Engine(
@@ -570,5 +647,6 @@ def run_workload(
         ),
         dist=dist,
         qb=qb,
+        hbm=hbm,
     )
     return engine.run(make_coroutine, queries)

@@ -321,3 +321,31 @@ class ResidentView:
             self.binary_codes.nbytes + self.norms.nbytes + self.ip_bar.nbytes
             + self.ext_codes.nbytes + self.ext_lo.nbytes + self.ext_step.nbytes
         )
+
+
+@dataclasses.dataclass
+class CacheSlotView:
+    """Slot-indexed sibling of ``ResidentView``: the HBM record-cache tier's
+    level-2 code arrays, addressed by CACHE SLOT rather than vertex id.
+
+    Where ``ResidentView`` aliases an index's full build-time tables (gathered
+    by vid), this view aliases a ``DeviceRecordCache``'s ``cache_ext`` /
+    ``cache_lo`` / ``cache_step`` slot arrays — the records currently resident
+    in the HBM tier.  A refine request whose vids map to slots gathers rows
+    from here (``refine_slots``) instead of re-uploading payload bytes; the
+    slot indirection is resolved on the host (record_map lookup) and only the
+    small slot-index vector crosses to the kernel.
+    """
+
+    qb: "QuantizedBase"          # the index whose records fill the slots
+    ext: np.ndarray              # (S, d/2 or d) uint8 — aliases cache_ext
+    lo: np.ndarray               # (S,) float32 — aliases cache_lo
+    step: np.ndarray             # (S,) float32 — aliases cache_step
+
+    def gather(
+        self, slots: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return self.ext[slots], self.lo[slots], self.step[slots]
+
+    def nbytes(self) -> int:
+        return self.ext.nbytes + self.lo.nbytes + self.step.nbytes

@@ -122,15 +122,25 @@ class RecordAccessor:
     slot (engine ``load_wait`` op) instead of re-reading the page; co-resident
     records are installed as one ``admit_group``.  ``async_load=False``
     reproduces the legacy per-record synchronous admits (kept for the
-    determinism/parity tests and as the pre-shared-pool baseline)."""
+    determinism/parity tests and as the pre-shared-pool baseline).
+
+    ``hbm`` (``core.hbm.HbmTier`` / ``HbmView``, default None == off) inserts
+    the HBM record-cache tier ABOVE the pool: lookups consult the tier first
+    (a tier hit touches neither the pool nor the SSD), tier misses fall
+    through to the pool unchanged, and a pool hit on a record the tier does
+    not hold promotes it (``note_hit``) for the next dispatch-boundary
+    scatter.  The pool's miss path is untouched — its ``on_publish`` hook,
+    not the accessor, stages freshly loaded records."""
 
     def __init__(self, index, pool, cost: CostModel, co_admit: bool = True,
-                 track_access: bool = False, async_load: bool = True):
+                 track_access: bool = False, async_load: bool = True,
+                 hbm=None):
         self.index = index
         self.pool = pool
         self.cost = cost
         self.co_admit = co_admit
         self.async_load = async_load
+        self.hbm = hbm
         self.reads = 0
         # per-vertex / per-page access counters (Fig. 4 skew study)
         self.track_access = track_access
@@ -147,6 +157,9 @@ class RecordAccessor:
     def resident(self, vid: int) -> bool:
         # Alg. 2's InMemory(): a LOCKED slot is NOT in memory — pivoting to
         # it would block on the in-flight load instead of avoiding an I/O.
+        # A record installed in an HBM cache slot is as in-memory as it gets.
+        if self.hbm is not None and self.hbm.ready(vid):
+            return True
         return self.pool.peek_present(vid)
 
     def _admit_from_page(self, vid: int, page: bytes):
@@ -183,8 +196,14 @@ class RecordAccessor:
 
     def get(self, vid: int):
         self._track(vid)
+        if self.hbm is not None:
+            rec = self.hbm.lookup(vid)
+            if rec is not None:
+                return rec  # tier hit: pool and SSD untouched
         rec = self.pool.lookup(vid)
         if rec is not None:
+            if self.hbm is not None:
+                self.hbm.note_hit(vid, rec)  # proven hot: promote to the tier
             return rec
         if self.async_load:
             while self.pool.is_loading(vid):
@@ -201,9 +220,16 @@ class RecordAccessor:
         loading: list[int] = []
         for v in vids:
             self._track(v)
+            if self.hbm is not None:
+                rec = self.hbm.lookup(v)
+                if rec is not None:
+                    out[v] = rec  # tier hit: pool and SSD untouched
+                    continue
             rec = self.pool.lookup(v)
             if rec is not None:
                 out[v] = rec
+                if self.hbm is not None:
+                    self.hbm.note_hit(v, rec)
             elif self.async_load and self.pool.is_loading(v):
                 loading.append(v)
             else:
@@ -245,6 +271,8 @@ class RecordAccessor:
     def prefetch_op(self, vid: int):
         """Return a fire-and-forget op loading vid's record, or None if the
         record is already present or its load is already in flight."""
+        if self.hbm is not None and self.hbm.ready(vid):
+            return None  # already served from an HBM slot: nothing to load
         if self.pool.peek_resident(vid):
             return None
         pid = self.index.page_of(vid)

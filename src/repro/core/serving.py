@@ -49,6 +49,7 @@ from repro.core import distance as distance_mod
 from repro.core.bufferpool import RecordBufferPool
 from repro.core.dataset import recall_at_k
 from repro.core.engine import Engine, EngineConfig
+from repro.core.hbm import HbmTier, HbmView
 from repro.core.pagecache import PageCache
 from repro.core.quant import QuantizedBase
 from repro.core.search import PageAccessor, RecordAccessor, SearchParams
@@ -338,6 +339,28 @@ class ServingPlane:
                 tenant_quota=self.config.tenant_quota,
             )
 
+        # ---- HBM record tier above the shared pool ------------------------
+        # One device cache for the whole plane, addressed by GLOBAL vids over
+        # the combined table (required: slot gathers index the one registered
+        # table).  Static-partition mode gets no tier — it is the baseline.
+        self.hbm: HbmTier | None = None
+        hbm_on = (
+            baselines_mod.default_hbm()[0]
+            if self.config.hbm_tier is None else self.config.hbm_tier
+        )
+        if hbm_on and self.pool is not None and self.table is not None:
+            slots = (
+                self.config.hbm_slots
+                or baselines_mod.default_hbm()[1]
+                or self.pool.n_slots
+            )
+            max_r = max(int(s.graph.R) for s in specs)
+            self.hbm = HbmTier(
+                self.table, global_vtp,
+                n_slots=max(8, min(int(slots), self.n_vids)), R=max_r,
+            )
+            self.pool.on_publish = self.hbm.note_publish
+
         # ---- rewire each tenant onto the plane ----------------------------
         self.tenants: list[Tenant] = []
         for i, (spec, b) in enumerate(zip(specs, built)):
@@ -360,6 +383,10 @@ class ServingPlane:
                     view, handle, b.cost,
                     co_admit=self.config.co_admit,
                     async_load=self.config.async_load,
+                    hbm=(
+                        HbmView(self.hbm, vid_bases[i])
+                        if self.hbm is not None else None
+                    ),
                 )
             else:
                 acc = PageAccessor(
@@ -421,6 +448,11 @@ class ServingPlane:
         # snapshot cumulative counters -> per-run deltas
         acc0 = [t.accessor.stats() for t in tenants]
         reads0 = [t.accessor.reads for t in tenants]
+        hbm0 = [
+            (t.accessor.hbm.hits, t.accessor.hbm.misses)
+            if getattr(t.accessor, "hbm", None) is not None else None
+            for t in tenants
+        ]
         pools = {id(self.pool): self.pool} if self.pool is not None else {}
         for t in tenants:
             p = getattr(t.accessor, "pool", None)
@@ -437,6 +469,7 @@ class ServingPlane:
             config=self.engine_config,
             dist=self.dist,
             qb=None,  # every request carries its table (the tenant tag)
+            hbm=self.hbm,
         )
         results, stats = engine.run(make_coroutine, queries)
 
@@ -463,7 +496,7 @@ class ServingPlane:
         # per-tenant slices
         lat_by_qid = dict(zip(stats.latency_qids, stats.latencies))
         tenant_runs: list[TenantRun] = []
-        for t, (h0, m0), r0 in zip(tenants, acc0, reads0):
+        for t, (h0, m0), r0, hb0 in zip(tenants, acc0, reads0, hbm0):
             pos = workload.positions(t.tid)
             t_results = [results[i] for i in pos]
             ts = WorkloadStats(n_queries=len(pos))
@@ -476,6 +509,12 @@ class ServingPlane:
             ts.cache_misses = m1 - m0
             ts.io_count = t.accessor.reads - r0
             ts.io_bytes = ts.io_count * self.page_size
+            if hb0 is not None:
+                # per-tenant tier split from the view's own counters, as a
+                # per-run delta (same idempotence rule as cache_hits)
+                hv = t.accessor.hbm
+                ts.hbm_hits = hv.hits - hb0[0]
+                ts.hbm_misses = hv.misses - hb0[1]
             recall = None
             if t.spec.groundtruth is not None and len(pos):
                 k = t.spec.groundtruth.shape[1]
@@ -501,6 +540,8 @@ def evaluate_plane(
     throughput plus the per-tenant recall/QPS/p99/hit-rate split)."""
     run = plane.run(workload, ssd_config)
     s = run.stats
+    served = s.hbm_hits + s.cache_hits
+    accesses = served + s.cache_misses
     out = {
         "workload": workload.name,
         "n_ops": len(workload),
@@ -520,6 +561,11 @@ def evaluate_plane(
         "score_flushes": s.score_flushes,
         "cross_tenant_flushes": s.cross_tenant_flushes,
         "overlap_flushes": s.overlap_flushes,
+        "hbm_tier": plane.hbm is not None,
+        "hbm_hits": s.hbm_hits,
+        "hbm_hit_rate": s.hbm_hit_rate,
+        "hbm_scatters": s.hbm_scatters,
+        "combined_hit_rate": served / accesses if accesses else 0.0,
         "tenants": {},
     }
     for tr in run.tenants:
@@ -531,5 +577,7 @@ def evaluate_plane(
             "p99_latency_ms": tr.stats.p99_latency_ms(),
             "hit_rate": tr.stats.hit_rate,
             "reads": tr.stats.io_count,
+            "hbm_hits": tr.stats.hbm_hits,
+            "hbm_hit_rate": tr.stats.hbm_hit_rate,
         }
     return out

@@ -74,6 +74,22 @@ class CostModel:
                                          # (host->device DMA of ~hundreds of KB
                                          # at PCIe rates), charged per
                                          # registered index, NOT per hop
+    full_dispatch_s: float = 0.3e-6      # dispatch of an fp32 refine_full batch
+                                         # (BLAS GEMV path) — calibrated apart
+                                         # from the int4 refine dispatch; the
+                                         # default equals batch_dispatch_s so
+                                         # uncalibrated runs are unchanged
+    hbm_scatter_s: float = 1e-6          # one double-buffered scatter DMA that
+                                         # installs a staged admit group into
+                                         # HBM cache slots; overlapped with the
+                                         # concurrent fused dispatch, so only
+                                         # the non-hidden remainder is charged
+    dist_hbm_per_dim: float = 0.05e-9    # 4-bit refinement of a record already
+                                         # resident in an HBM cache slot: the
+                                         # gather feeds the kernel from device
+                                         # memory (no host decode / upload), so
+                                         # the per-dim cost drops to near the
+                                         # binary-scan rate
 
     def estimate(self, count: int, dim: int) -> float:
         """Level-1 binary distance estimates for `count` vertices."""
@@ -87,11 +103,18 @@ class CostModel:
         """Exact fp32 distance of one record (DiskANN-style refinement)."""
         return dim * self.dist_full_per_dim
 
-    def fused_batch_s(self, total_flop_s: float) -> float:
+    def hbm_refine_ext(self, dim: int) -> float:
+        """Level-2 refinement of one record served from an HBM cache slot."""
+        return dim * self.dist_hbm_per_dim
+
+    def fused_batch_s(self, total_flop_s: float, kind: str = "quant") -> float:
         """One fused cross-query evaluation: the per-row flops of every
         participating query's rows plus a SINGLE kernel dispatch, amortized
-        across the whole rendezvous batch (instead of one dispatch per query)."""
-        return self.batch_dispatch_s + total_flop_s
+        across the whole rendezvous batch (instead of one dispatch per query).
+        ``kind`` selects the dispatch constant: fp32 ``refine_full`` batches
+        ("full") launch through a different kernel than the quantized paths."""
+        dispatch = self.full_dispatch_s if kind == "full" else self.batch_dispatch_s
+        return dispatch + total_flop_s
 
 
 @dataclasses.dataclass
@@ -129,6 +152,12 @@ class WorkloadStats:
                                    # more than one tenant (serving plane)
     overlap_flushes: int = 0   # shared-rendezvous flushes issued while another
                                # worker's completions were still in flight
+    # HBM record-cache tier (device-resident hot records above the host pool)
+    hbm_hits: int = 0          # record lookups served from HBM cache slots
+    hbm_misses: int = 0        # lookups that fell through to the host pool
+    hbm_scatters: int = 0      # double-buffered scatter DMAs installing
+                               # staged admit groups into slots
+    hbm_evictions: int = 0     # slots reclaimed by the device clock sweep
 
     @property
     def qps(self) -> float:
@@ -155,6 +184,11 @@ class WorkloadStats:
     def hit_rate(self) -> float:
         tot = self.cache_hits + self.cache_misses
         return self.cache_hits / tot if tot else 0.0
+
+    @property
+    def hbm_hit_rate(self) -> float:
+        tot = self.hbm_hits + self.hbm_misses
+        return self.hbm_hits / tot if tot else 0.0
 
     @property
     def requests_per_flush(self) -> float:

@@ -51,14 +51,17 @@ class DeviceRecordCache:
     evictions: int = 0
 
     @classmethod
-    def create(cls, n_slots: int, vid_to_page: np.ndarray, dim: int, R: int):
+    def create(cls, n_slots: int, vid_to_page: np.ndarray, dim: int, R: int,
+               code_cols: int | None = None):
         n = len(vid_to_page)
+        if code_cols is None:
+            code_cols = dim // 2  # 4-bit packed ext codes (8-bit passes dim)
         return cls(
             record_map=-(vid_to_page.astype(np.int32) + 1),
             disk_pages=vid_to_page.astype(np.int32),
             slot_state=np.full(n_slots, FREE, np.int8),
             slot_vid=np.full(n_slots, -1, np.int32),
-            cache_ext=np.zeros((n_slots, dim // 2), np.uint8),
+            cache_ext=np.zeros((n_slots, code_cols), np.uint8),
             cache_lo=np.zeros(n_slots, np.float32),
             cache_step=np.ones(n_slots, np.float32),
             cache_adj=np.full((n_slots, R), -1, np.int32),
@@ -85,7 +88,9 @@ class DeviceRecordCache:
     # ----------------------------------------------------------------- clock
 
     def sweep(self, need: int) -> np.ndarray:
-        """Vectorized clock: returns freed slot indices (len == need)."""
+        """Vectorized clock: returns freed slot indices (len <= need; LOCKED
+        slots are never reclaimed, and `need` is capped at the slot count)."""
+        need = min(need, self.n_slots)
         freed: list[int] = []
         for _ in range(3):  # at most 3 passes (mirror of the host-plane bound)
             if len(freed) >= need:

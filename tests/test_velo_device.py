@@ -9,7 +9,13 @@ import jax.numpy as jnp  # noqa: E402
 from repro.core.dataset import recall_at_k
 from repro.velo import batch_search as bs
 from repro.velo import scan_search as ss
-from repro.velo.device_cache import DeviceRecordCache, FREE, MARKED, OCCUPIED
+from repro.velo.device_cache import (
+    DeviceRecordCache,
+    FREE,
+    LOCKED,
+    MARKED,
+    OCCUPIED,
+)
 from repro.velo.index import from_host
 
 
@@ -112,3 +118,111 @@ def test_device_cache_second_chance():
             np.ones(1), [np.asarray([0])], vid_to_page[5:6])
     assert c.resident_mask(np.asarray([0]))[0], "hot record must survive"
     assert not c.resident_mask(np.asarray([1]))[0]
+
+
+def _filled_cache(n_slots=4, n=32):
+    vid_to_page = np.arange(n) // 4
+    c = DeviceRecordCache.create(n_slots, vid_to_page, dim=16, R=4)
+    vids = np.arange(n_slots)
+    c.admit(vids, np.full((n_slots, 8), 7, np.uint8), np.zeros(n_slots),
+            np.ones(n_slots), [np.asarray([0])] * n_slots, vid_to_page[vids])
+    return c, vid_to_page
+
+
+def test_device_cache_sweep_all_locked():
+    """A sweep over a fully-LOCKED cache frees nothing and touches no state:
+    LOCKED slots are mid-scatter and must never be reclaimed."""
+    c, _ = _filled_cache()
+    c.slot_state[:] = LOCKED
+    before_map = c.record_map.copy()
+    before_vid = c.slot_vid.copy()
+    freed = c.sweep(3)
+    assert len(freed) == 0
+    assert (c.slot_state == LOCKED).all()
+    np.testing.assert_array_equal(c.record_map, before_map)
+    np.testing.assert_array_equal(c.slot_vid, before_vid)
+    assert c.evictions == 0
+
+
+def test_device_cache_sweep_need_exceeds_slots():
+    """`need` far beyond the slot count is capped, not an infinite clock walk;
+    an all-OCCUPIED cache yields every slot (demote pass, then evict pass)."""
+    c, _ = _filled_cache(n_slots=4)
+    freed = c.sweep(100)
+    assert len(freed) == 4
+    assert (c.slot_state == FREE).all()
+    assert c.evictions == 4
+    # freed slots' records point back at their disk pages
+    for v in range(4):
+        assert c.record_map[v] < 0
+
+
+def test_device_cache_admit_already_resident():
+    """Re-admitting a resident vid is a no-op: same slot, payload untouched,
+    no second slot consumed."""
+    c, vid_to_page = _filled_cache(n_slots=4)
+    slot0 = int(c.record_map[0])
+    before_ext = c.cache_ext[slot0].copy()
+    used_before = int((c.slot_state != FREE).sum())
+    c.admit(np.asarray([0]), np.full((1, 8), 99, np.uint8), np.full(1, 5.0),
+            np.full(1, 5.0), [np.asarray([1, 2])], vid_to_page[:1])
+    assert int(c.record_map[0]) == slot0
+    np.testing.assert_array_equal(c.cache_ext[slot0], before_ext)
+    assert int((c.slot_state != FREE).sum()) == used_before
+
+
+def test_hbm_scatter_double_buffer_parity(small_qb):
+    """The staged-scatter tier (records parked during step t, installed by
+    one batched scatter at the t/t+1 boundary) must land in the SAME state a
+    sequential per-record admit reaches, and the device mirror maintained by
+    the jitted scatter must stay bit-identical to the host slot arrays."""
+    from repro.core.hbm import HbmTier
+    from repro.core.store import DecodedRecord
+
+    n = len(small_qb.ext_codes)
+    vid_to_page = np.arange(n) // 4
+
+    def record(v):
+        return DecodedRecord(
+            vid=v, adjacency=np.asarray([(v + 1) % n, (v + 2) % n]),
+            ext_payload=small_qb.record_payload(v),
+        )
+
+    tier = HbmTier(small_qb, vid_to_page, n_slots=8, R=4)
+    ref = DeviceRecordCache.create(
+        8, vid_to_page, dim=small_qb.dim, R=4,
+        code_cols=small_qb.ext_codes.shape[1],
+    )
+    tier.device_arrays()  # force the mirror so every scatter updates it
+    rng = np.random.default_rng(0)
+    for _ in range(6):  # steps, each staging one admit group
+        group = rng.choice(n, size=3, replace=False)
+        staged = []
+        for v in group:
+            if tier._stage(int(v), record(int(v))):
+                staged.append(int(v))
+        assert tier.scatter_staged() == len(staged)
+        if staged:  # sequential reference: plain admit of the same group
+            recs = [record(v) for v in staged]
+            ncode = small_qb.ext_codes.shape[1]
+            ref.admit(
+                np.asarray(staged),
+                np.stack([np.frombuffer(r.ext_payload[:ncode], np.uint8)
+                          for r in recs]),
+                np.asarray([np.frombuffer(r.ext_payload[ncode:ncode + 4],
+                                          np.float32)[0] for r in recs]),
+                np.asarray([np.frombuffer(r.ext_payload[ncode + 4:ncode + 8],
+                                          np.float32)[0] for r in recs]),
+                [r.adjacency.astype(np.int32) for r in recs],
+                vid_to_page[staged],
+            )
+        np.testing.assert_array_equal(tier.cache.record_map, ref.record_map)
+        np.testing.assert_array_equal(tier.cache.slot_state, ref.slot_state)
+        np.testing.assert_array_equal(tier.cache.slot_vid, ref.slot_vid)
+        np.testing.assert_array_equal(tier.cache.cache_ext, ref.cache_ext)
+        # the functionally-updated device mirror tracks the host arrays
+        ext_d, lo_d, step_d = tier.device_arrays()
+        np.testing.assert_array_equal(np.asarray(ext_d), tier.cache.cache_ext)
+        np.testing.assert_array_equal(np.asarray(lo_d), tier.cache.cache_lo)
+        np.testing.assert_array_equal(np.asarray(step_d),
+                                      tier.cache.cache_step)
