@@ -1,0 +1,16 @@
+"""Protocol verifier for the coroutine runtime and cache hierarchy.
+
+Two layers (docs/verification.md):
+
+  * static lint (``repro.analysis.lint``): AST passes over the source —
+    op-registry/arity checks against ``registry.ENGINE_OPS``, LOCKED-window
+    begin/finish/abort pairing, coroutine purity, determinism lints.  Never
+    imports the code under check; runs as ``python -m repro.analysis src/``.
+  * dynamic checker (``repro.analysis.protocol``): a trace validator armed
+    by ``SystemConfig.verify_protocol`` that validates live pool/HBM slot
+    transitions against the declarative spec (``repro.analysis.spec``), plus
+    the bounded schedule explorer (``repro.analysis.explore``) that permutes
+    the engine's scheduling ties and proves results schedule-invariant.
+"""
+
+from repro.analysis.lint import Finding, run_lint, run_lint_text  # noqa: F401

@@ -172,6 +172,14 @@ class SystemConfig:
     hbm_slots: int | None = None  # HBM tier slot count (None -> process
                                   # default, which falls back to the host
                                   # pool's slot count)
+    verify_protocol: bool = False  # arm the dynamic protocol checker
+                                  # (repro.analysis.protocol): validates every
+                                  # pool/HBM slot transition against the
+                                  # Fig. 5 spec, runs cheap invariants at
+                                  # each flush boundary, and raises at the
+                                  # end of run() on any violation.  Purely
+                                  # observational: results are bitwise
+                                  # identical to an unverified run.
 
 
 @dataclasses.dataclass
@@ -186,12 +194,14 @@ class System:
     store: object
     cost: CostModel
     hbm: object | None = None  # HbmTier when the device record tier is on
+    checker: object | None = None  # ProtocolChecker when verify_protocol is on
 
     def make_coroutine(self, qid: int, q: np.ndarray):
         return self.algorithm(self.ctx, q, self.config.params)
 
     def run(
-        self, queries: np.ndarray, ssd_config: SSDConfig | None = None
+        self, queries: np.ndarray, ssd_config: SSDConfig | None = None,
+        schedule=None,
     ) -> tuple[list, WorkloadStats]:
         ssd = SSD(ssd_config)
         pool = getattr(self.ctx.accessor, "pool", None)
@@ -218,7 +228,11 @@ class System:
             shared_rendezvous=bool(self.config.shared_rendezvous),
             overlap_flush=bool(self.config.overlap_flush),
             hbm=self.hbm,
+            schedule=schedule,
+            verify=self.checker,
         )
+        if self.checker is not None:
+            self.checker.raise_if_violations()
         hits, misses = self.ctx.accessor.stats()
         stats.cache_hits = hits - hits0
         stats.cache_misses = misses - misses0
@@ -408,6 +422,23 @@ def build_system(
                       n_slots=max(8, min(int(slots), n)), R=graph.R)
         acc.hbm = hbm
         acc.pool.on_publish = hbm.note_publish
+    checker = None
+    if config.verify_protocol:
+        # lazy import: core stays import-independent of the analysis layer
+        from repro.analysis.protocol import ProtocolChecker
+
+        checker = ProtocolChecker()
+        if hbm is not None:
+            # order matters: shadow the tier's entry points FIRST, then
+            # re-point the pool's publish hook at the (now wrapped) staging
+            # method, then let watch_pool chain its double-publish probe in
+            # front of it — otherwise the pool keeps calling the raw bound
+            # method captured above and staging goes unobserved
+            checker.watch_hbm(hbm)
+            acc.pool.on_publish = hbm.note_publish
+        pool = getattr(acc, "pool", None)
+        if pool is not None:
+            checker.watch_pool(pool)
     ctx = SearchContext(
         index=index,
         qb=qb,
@@ -428,6 +459,7 @@ def build_system(
         store=index.store,
         cost=cost,
         hbm=hbm,
+        checker=checker,
     )
 
 

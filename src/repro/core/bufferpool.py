@@ -521,13 +521,43 @@ class RecordBufferPool:
         self.group_admits = self.clock_skips = 0
         self.quota_reclaims = self.quota_denials = 0
 
-    def check_invariants(self) -> None:
-        """Structural invariants (exercised by hypothesis tests):
+    def check_invariants(self, cheap: bool = False) -> None:
+        """Structural invariants (exercised by hypothesis tests and, with
+        ``SystemConfig.verify_protocol``, at every engine flush boundary):
         every resident vid's slot points back at it; free slots hold nothing;
         occupancy + free == n_slots; LOCKED slots carry no record yet and are
         the only ones allowed parked waiters; per-tenant quota accounting
-        matches actual slot ownership exactly."""
-        assert len(self.free_list) == (self.state == SlotState.FREE).sum()
+        matches actual slot ownership exactly.
+
+        ``cheap=True`` runs only the vectorized subset (free-list/state
+        agreement, mapping-array occupancy, quota totals and caps, and the
+        waiters-only-on-LOCKED rule) — O(n_slots) numpy plus O(waiters)
+        python, no per-slot python loop; this is what the protocol checker
+        calls on the hot flush path."""
+        assert len(self.free_list) == (self.state == SlotState.FREE).sum(), (
+            "free list out of sync with slot states"
+        )
+        resident = (self.record_map & RESIDENT_BIT) != 0
+        assert int(resident.sum()) == self.occupancy(), (
+            "mapping-array residency out of sync with pool occupancy"
+        )
+        # waiter lists may exist ONLY for vids inside an open LOCKED window —
+        # a waiter on a published/FREE/MARKED slot is a lost wakeup in the
+        # making (nothing will ever queue its resume)
+        for vid, ws in self.waiters.items():
+            assert ws, "empty waiter lists must be dropped"
+            assert self.is_loading(vid), (
+                f"waiters parked on vid {vid} whose slot is not LOCKED"
+            )
+        assert int(self.tenant_owned.sum()) == self.occupancy(), (
+            "tenant quota accounting out of sync with occupancy"
+        )
+        if self.tenant_cap is not None:
+            assert (self.tenant_owned <= self.tenant_cap).all(), (
+                "tenant holds more slots than its quota cap"
+            )
+        if cheap:
+            return
         owned_recount = np.zeros(self.n_tenants, dtype=np.int64)
         for s in range(self.n_slots):
             st = self.state[s]
@@ -545,7 +575,8 @@ class RecordBufferPool:
                     assert self.slots[s] is None  # record not published yet
         # quota accounting == slot ownership, after every operation
         assert (owned_recount == self.tenant_owned).all(), (
-            owned_recount, self.tenant_owned
+            f"tenant quota recount {owned_recount.tolist()} disagrees with "
+            f"tenant_owned {self.tenant_owned.tolist()}"
         )
         for t in range(self.n_tenants):
             assert self.tenant_slots[t] == {
@@ -553,12 +584,6 @@ class RecordBufferPool:
             }, f"tenant {t} slot index out of sync"
         if self.tenant_cap is not None:
             assert (self.tenant_owned <= self.tenant_cap).all()
-        resident = (self.record_map & RESIDENT_BIT) != 0
-        assert int(resident.sum()) == self.occupancy()
-        # waiter lists exist only for vids inside an open LOCKED window
-        for vid, ws in self.waiters.items():
-            assert ws, "empty waiter lists must be dropped"
-            assert self.is_loading(vid)
         # the group reverse index and the per-slot tags agree exactly
         for gid, members in self.group_slots.items():
             assert members, "empty group entries must be dropped"

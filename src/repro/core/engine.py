@@ -131,6 +131,13 @@ class Engine:
         qb=None,                    # QuantizedBase for estimate/refine kinds
         hbm=None,                   # core.hbm.HbmTier: HBM record-cache tier
                                     # (None == off, the bitwise-parity default)
+        schedule=None,              # analysis.explore.SchedulePolicy: permutes
+                                    # equal-time scheduling ties and records
+                                    # the decision trace (None == identity
+                                    # order, bitwise the pre-seam engine)
+        verify=None,                # analysis.protocol.ProtocolChecker: runs
+                                    # cheap pool invariants at flush
+                                    # boundaries and end-of-run detectors
     ):
         self.store = store
         self.ssd = ssd
@@ -139,6 +146,8 @@ class Engine:
         self.dist = dist
         self.qb = qb
         self.hbm = hbm
+        self.schedule = schedule
+        self.verify = verify
 
     def run(
         self,
@@ -148,6 +157,11 @@ class Engine:
         cfg = self.config
         if self.dist is None:
             self.dist = distance_mod.get_engine()
+        # schedule-exploration / protocol-verification seams (both None in
+        # production: the identity schedule and no checker are bitwise the
+        # pre-seam engine — tests/test_analysis.py pins that parity)
+        sched = self.schedule
+        verify = self.verify
         workers = [_Worker(i) for i in range(cfg.n_workers)]
         query_queue: deque[int] = deque(range(len(queries)))
         start_time: dict[int, float] = {}
@@ -158,7 +172,11 @@ class Engine:
         # the same rule PR 5 established for dist_uploads / pool pressure.
         hbm_c0 = self.hbm.counters() if self.hbm is not None else None
 
-        # global completion-event heap: (time, seq, kind, payload)
+        # global completion-event heap: (time, rank, seq, kind, payload).
+        # rank is 0 everywhere without a schedule policy — ordering is then
+        # (time, seq), exactly the pre-seam heap; a policy assigns seeded
+        # ranks so EQUAL-TIME events drain in a permuted order (actions at
+        # distinct times never reorder: the explorer perturbs only ties).
         events: list = []
         seq = 0
         # in-flight page reads: pid -> completion_time (dedup window), with a
@@ -219,13 +237,15 @@ class Engine:
 
         def push_event(time: float, kind: str, payload) -> None:
             nonlocal seq
-            heapq.heappush(events, (time, seq, kind, payload))
+            rank = 0 if sched is None else sched.event_rank(seq)
+            heapq.heappush(events, (time, rank, seq, kind, payload))
             seq += 1
 
-        # buffer pools with coroutines parked on LOCKED slots (load_wait op);
-        # their pending_resumes queues are drained after every action that can
-        # publish a record (worker step or prefetch callback)
-        wait_pools: set = set()
+        # buffer pools with coroutines parked on LOCKED slots (load_wait op),
+        # keyed by id so registration order — not hash order — drives the
+        # resume drain; their pending_resumes queues are drained after every
+        # action that can publish a record (worker step or prefetch callback)
+        wait_pools: dict[int, object] = {}
 
         def drain_pool_resumes(now: float) -> None:
             """Turn records published by finish_load into resume events for
@@ -233,7 +253,7 @@ class Engine:
             coalescing across all workers.  The pending check keeps the
             common (nothing-published) case allocation-free on the hot
             scheduling path."""
-            for pool in wait_pools:
+            for pool in wait_pools.values():
                 if not pool.pending_resumes:
                     continue
                 for (wkr, gen, qid), rec in pool.take_resumes():
@@ -244,7 +264,9 @@ class Engine:
         def apply_due_events(now: float) -> None:
             """Apply completions (callbacks / worker resumes) due by `now`."""
             while events and events[0][0] <= now:
-                time, _, kind, payload = heapq.heappop(events)
+                time, _, _, kind, payload = heapq.heappop(events)
+                if sched is not None and events and events[0][0] == time:
+                    sched.ties["event"] += 1  # a genuinely permutable tie
                 if kind == "callback":
                     cb, pid, issuer = payload
                     cb(pid, self.store.read_page(pid))
@@ -346,8 +368,16 @@ class Engine:
             # separate per-table calls does not count
             if any(len(ts) > 1 for ts in tenants_by_group.values()):
                 stats.cross_tenant_flushes += 1
-            if self.hbm is not None and self.hbm.scatter_staged():
-                initiator.t += max(0.0, self.cost.hbm_scatter_s - dispatch_s)
+            if self.hbm is not None:
+                n_scattered = self.hbm.scatter_staged()
+                if n_scattered:
+                    initiator.t += max(
+                        0.0, self.cost.hbm_scatter_s - dispatch_s
+                    )
+                    if sched is not None:
+                        sched.note(("scatter", n_scattered))
+            if verify is not None:
+                verify.at_flush()
             return outs
 
         def flush_scores(w: _Worker) -> None:
@@ -466,19 +496,26 @@ class Engine:
                             self.dist, self.qb, [req],
                             hbm=self.hbm, splits=splits,
                         )[0]
-                        if self.hbm.scatter_staged():
+                        n_scattered = self.hbm.scatter_staged()
+                        if n_scattered:
                             w.t += max(0.0, self.cost.hbm_scatter_s - d)
+                            if sched is not None:
+                                sched.note(("scatter", n_scattered))
                     else:
                         w.t += self.cost.fused_batch_s(req.flop_s)
                         value = distance_mod.execute_requests(
                             self.dist, self.qb, [req]
                         )[0]
+                    if verify is not None:
+                        # the per-query dispatch is the degenerate flush
+                        # boundary (fusion off): same invariant cadence
+                        verify.at_flush()
                 elif kind == "load_wait":
                     _, vid, pool = op
                     if pool.is_loading(vid):
                         # park on the LOCKED slot; finish_load resumes us with
                         # the record (one I/O for the whole waiter cohort)
-                        wait_pools.add(pool)
+                        wait_pools[id(pool)] = pool
                         pool.add_waiter(vid, (w, gen, qid))
                         stats.lock_waits += 1
                         return  # suspended on the in-flight load
@@ -523,6 +560,9 @@ class Engine:
                     # isolation contract)
                     tok = min(tokens, key=lambda tk: (token_info[tk][1], tk))
                     pid, comp = token_info.pop(tok)
+                    if sched is not None:
+                        # the tie-break decision, exposed for replay checks
+                        sched.note(("wait_any", qid, pid))
                     toks = tokens_by_query.get(qid)
                     if toks is not None:
                         toks.discard(tok)
@@ -547,7 +587,14 @@ class Engine:
             cand = [w for w in workers if runnable(w)]
             next_event_t = events[0][0] if events else None
             if cand:
-                w = min(cand, key=lambda x: x.t)
+                if sched is None:
+                    w = min(cand, key=lambda x: x.t)
+                else:
+                    # equal-clock candidates are a genuine scheduling race:
+                    # permute which one runs (identity when rank == wid)
+                    w = min(cand, key=lambda x: (x.t, sched.worker_rank(x.wid)))
+                    if sum(1 for x in cand if x.t == w.t) > 1:
+                        sched.ties["worker"] += 1
                 if next_event_t is not None and next_event_t <= w.t:
                     apply_due_events(w.t)
                 run_worker_action(w)
@@ -559,15 +606,24 @@ class Engine:
                 # The earliest-clock contributing worker initiates (it would
                 # otherwise sit idle) — the fused batch spans all workers.
                 contributors = {id(wk): wk for wk, _, _, _ in shared_pending}
-                initiator = min(
-                    contributors.values(), key=lambda x: (x.t, x.wid)
-                )
+                if sched is None:
+                    initiator = min(
+                        contributors.values(), key=lambda x: (x.t, x.wid)
+                    )
+                else:
+                    initiator = min(
+                        contributors.values(),
+                        key=lambda x: (x.t, sched.worker_rank(x.wid)),
+                    )
+                    if sum(1 for x in contributors.values()
+                           if x.t == initiator.t) > 1:
+                        sched.ties["worker"] += 1
                 if next_event_t is not None and next_event_t <= initiator.t:
                     def initiator_due() -> bool:
                         # ANY due completion of the initiator's own forces the
                         # apply-first path — the overlap never reorders the
                         # initiator's own completions past its flush
-                        for time, _, kind, payload in events:
+                        for time, _, _, kind, payload in events:
                             if time > initiator.t:
                                 continue
                             wkr = payload[2] if kind == "callback" else payload[0]
@@ -609,6 +665,8 @@ class Engine:
                 break
 
         stats.makespan_s = max((w.t for w in workers), default=0.0)
+        if verify is not None:
+            verify.at_end()
         if hbm_c0 is not None:
             c1 = self.hbm.counters()
             stats.hbm_hits = c1["hits"] - hbm_c0["hits"]
@@ -634,6 +692,8 @@ def run_workload(
     shared_rendezvous: bool = False,
     overlap_flush: bool = False,
     hbm=None,
+    schedule=None,
+    verify=None,
 ) -> tuple[list, WorkloadStats]:
     """Convenience wrapper: build an engine, run all queries, return results+stats."""
     engine = Engine(
@@ -648,5 +708,7 @@ def run_workload(
         dist=dist,
         qb=qb,
         hbm=hbm,
+        schedule=schedule,
+        verify=verify,
     )
     return engine.run(make_coroutine, queries)

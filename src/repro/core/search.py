@@ -268,6 +268,17 @@ class RecordAccessor:
             out[v] = rec
         return out
 
+    def install(self, vid: int, pid: int, page: bytes):
+        """Decode vid's record from an already-fetched page and admit it —
+        the accessor-owned install path for algorithms that drive their own
+        reads (PipeANN's relaxed-ordering completions).  Keeping the pool
+        interaction here, not in the coroutine, is the layering the purity
+        lint (repro.analysis) enforces: coroutines yield ops and call
+        accessors; only accessors touch the pool."""
+        rec = self.index.decode_record(vid, page)
+        self.pool.admit(vid, rec)
+        return rec
+
     def prefetch_op(self, vid: int):
         """Return a fire-and-forget op loading vid's record, or None if the
         record is already present or its load is already in flight."""
@@ -358,6 +369,13 @@ class PageAccessor:
         for v in vids:
             out[v] = self.index.decode_record(v, have[vid_page[v]])
         return out
+
+    def install(self, vid: int, pid: int, page: bytes):
+        """Admit an already-fetched page and decode vid's record out of it —
+        the page-granular twin of ``RecordAccessor.install`` (same contract:
+        the coroutine hands the bytes over; the accessor owns the cache)."""
+        self.cache.admit(pid, page)
+        return self.index.decode_record(vid, page)
 
     def prefetch_op(self, vid: int):
         pid = self.index.page_of(vid)
@@ -708,12 +726,8 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
         v = outstanding.pop(token)
         inflight.discard(v)
         acc.reads += 1
-        if hasattr(acc, "cache"):
-            acc.cache.admit(pid, page)
         yield ("compute", cost.page_parse_s + cost.record_decode_s)
-        rec = index.decode_record(v, page)
-        if hasattr(acc, "pool"):
-            acc.pool.admit(v, rec)
+        rec = acc.install(v, pid, page)
         if v in beam.explored:
             continue  # over-fetched: candidate already pruned/processed
         yield ("compute", cost.visit_overhead_s)

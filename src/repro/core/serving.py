@@ -412,6 +412,26 @@ class ServingPlane:
                 vid_base=vid_bases[i], page_base=page_bases[i],
             ))
 
+        # ---- dynamic protocol checker (SystemConfig.verify_protocol) ------
+        # wired AFTER the tenant rewire so static-partition per-tenant pools
+        # exist to be watched too; the hbm-first / re-point-hook / pool-last
+        # order is the same rule build_system follows
+        self.checker = None
+        if self.config.verify_protocol:
+            from repro.analysis.protocol import ProtocolChecker
+
+            self.checker = ProtocolChecker()
+            if self.hbm is not None:
+                self.checker.watch_hbm(self.hbm)
+                if self.pool is not None:
+                    self.pool.on_publish = self.hbm.note_publish
+            if self.pool is not None:
+                self.checker.watch_pool(self.pool)
+            for t in self.tenants:
+                p = getattr(t.accessor, "pool", None)
+                if isinstance(p, RecordBufferPool) and p is not self.pool:
+                    self.checker.watch_pool(p)
+
         # sync tenants (diskann/starling/pipeann are B=1 systems) clamp the
         # shared engine's per-worker batch: one scheduler serves everyone
         self.batch_size = min(b.config.batch_size for b in built)
@@ -430,7 +450,8 @@ class ServingPlane:
     # ------------------------------------------------------------------ run
 
     def run(
-        self, workload: MixedWorkload, ssd_config: SSDConfig | None = None
+        self, workload: MixedWorkload, ssd_config: SSDConfig | None = None,
+        schedule=None,
     ) -> PlaneRun:
         """Run a mixed arrival stream through the one engine; split the
         results and the serving metrics by tenant.  Stats are per-run deltas
@@ -470,8 +491,12 @@ class ServingPlane:
             dist=self.dist,
             qb=None,  # every request carries its table (the tenant tag)
             hbm=self.hbm,
+            schedule=schedule,
+            verify=self.checker,
         )
         results, stats = engine.run(make_coroutine, queries)
+        if self.checker is not None:
+            self.checker.raise_if_violations()
 
         # system-wide cache + pool-pressure deltas
         hits = misses = 0

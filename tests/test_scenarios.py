@@ -155,3 +155,38 @@ def test_scenario_matrix_other_backends(algo, backend, tiny):
     assert rec >= RECALL_FLOOR[algo], f"{label}: recall {rec:.3f}"
     _assert_no_leaks(sys_, engine, results, stats, label)
     assert stats.score_flushes > 0
+
+
+@pytest.mark.parametrize("fuse,shared", FUSE_MODES,
+                         ids=["nofuse", "fuse", "fuse+shared"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_scenario_matrix_verify_protocol_inert(algo, fuse, shared, tiny):
+    """The dynamic protocol checker (SystemConfig.verify_protocol) rides the
+    same cross-feature lattice bitwise-inertly: per cell, the verified run's
+    (ids, dists, hops) match the unverified run exactly, zero violations are
+    recorded, and the flush-boundary invariant pass demonstrably ran."""
+    ds, graph, qb = tiny
+
+    def run(verify):
+        cfg = baselines.SystemConfig(
+            buffer_ratio=0.2, n_workers=2, batch_size=4,
+            fuse=fuse, shared_rendezvous=shared, async_load=True,
+            hbm_tier=(algo == "velo"),  # one cell also crosses the HBM tier
+            verify_protocol=verify,
+            params=SearchParams(L=24, W=4),
+        )
+        sys_ = baselines.build_system(algo, ds.base, graph, qb, cfg)
+        results, _stats = sys_.run(ds.queries)
+        return sys_, results
+
+    _, ref = run(False)
+    sys_v, got = run(True)
+    label = f"{algo}/fuse={fuse}/shared={shared}/verify"
+    assert [
+        (list(r.ids), list(r.dists), r.hops) for r in got
+    ] == [
+        (list(r.ids), list(r.dists), r.hops) for r in ref
+    ], f"{label}: verified run diverged from unverified run"
+    assert sys_v.checker is not None, f"{label}: checker never armed"
+    sys_v.checker.raise_if_violations()
+    assert sys_v.checker.flushes > 0, f"{label}: no flush boundary observed"
