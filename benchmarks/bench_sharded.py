@@ -1,0 +1,213 @@
+"""Sharded scatter-gather serving: one index image across N engine shards.
+
+The serving plane splits PageStore pages (the affinity-placement atomic
+unit) across N engine shards; each query's frontier scatters to its owning
+shards, fuses through per-shard rendezvous buffers, and merges back through
+one small collective per flush — the all_gather + top_k idiom of
+repro.velo.dist_search lifted into the coroutine engine.
+
+Claims checked (the PR's acceptance bar):
+
+  * S=1 PARITY — the sharded engine with one shard is bitwise identical to
+    the unsharded engine (ids, dists, hops, makespan, per-query latencies)
+    for ALL FIVE algorithms;
+  * SCALING — velo QPS at 4 shards / 4 workers reaches >= 0.7 of linear
+    over 1 shard / 1 worker, with recall flat and shard bytes balanced;
+  * the two bugfix regressions that rode in with the plane: workload
+    generators keep never-sampled cold tenants in n_tenants, and the
+    distributed merge masks invalid top-k lanes before offset translation.
+
+Standalone:  python -m benchmarks.bench_sharded [--full] [--strict]
+(--strict exits non-zero when any claim check fails, same contract as
+benchmarks/run.py --strict.)
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import baselines
+from repro.core import dataset as dataset_mod
+from repro.core import vamana as vamana_mod
+from repro.core import workload as workload_mod
+from repro.core.quant import RabitQuantizer
+from repro.core.search import ALGORITHMS, SearchParams
+
+ALGOS = sorted(ALGORITHMS)
+EFFICIENCY_FLOOR = 0.7
+RECALL_DRIFT = 0.05
+
+
+def _parity_fixture():
+    ds = dataset_mod.make_dataset(n=600, d=32, n_queries=12, k=10, seed=4)
+    graph = vamana_mod.build_vamana(ds.base, R=12, L=24, batch_size=256,
+                                    seed=4)
+    qb = RabitQuantizer(32, seed=4).fit_encode(ds.base)
+    return ds, graph, qb
+
+
+def _parity_sweep() -> dict[str, bool]:
+    """S=1 sharded vs unsharded, bitwise, per algorithm (both fuse modes)."""
+    ds, graph, qb = _parity_fixture()
+
+    def run(algo, n_shards, fuse):
+        cfg = baselines.SystemConfig(
+            buffer_ratio=0.2, n_workers=1, batch_size=4, fuse=fuse,
+            n_shards=n_shards, params=SearchParams(L=24, W=4),
+        )
+        sys_ = baselines.build_system(algo, ds.base, graph, qb, cfg)
+        return sys_.run(ds.queries)
+
+    out = {}
+    for algo in ALGOS:
+        ok = True
+        for fuse in (False, True):
+            ref, ref_stats = run(algo, None, fuse)
+            got, got_stats = run(algo, 1, fuse)
+            ok &= [
+                (list(r.ids), list(r.dists), r.hops) for r in got
+            ] == [
+                (list(r.ids), list(r.dists), r.hops) for r in ref
+            ]
+            ok &= got_stats.makespan_s == ref_stats.makespan_s
+            ok &= got_stats.latencies == ref_stats.latencies
+            ok &= got_stats.scatter_ops > 0
+        out[algo] = ok
+    return out
+
+
+def _scaling(quick: bool) -> dict:
+    """Velo QPS across shard counts; one worker per shard (the fleet grows
+    with the plane).  The profile pins fuse_rows/batch at the measured
+    sweet spot so the efficiency check has headroom over its floor."""
+    if quick:
+        w = common.Workload("shardq", n=3000, d=64, n_queries=96, R=16,
+                            L=32, seed=7)
+        fuse_rows, params = 48, SearchParams(L=32, W=4)
+    else:
+        w = common.Workload("shard", n=8000, d=96, n_queries=192, R=24,
+                            L=48, seed=7)
+        fuse_rows, params = 48, SearchParams(L=48, W=4)
+
+    rows = {}
+    for S in (1, 2, 4):
+        cfg = baselines.SystemConfig(
+            buffer_ratio=0.2, n_workers=S, batch_size=8, fuse=True,
+            fuse_rows=fuse_rows, n_shards=S, params=params,
+        )
+        sys_ = baselines.build_system("velo", w.ds.base, w.graph, w.qb, cfg)
+        m = baselines.evaluate(sys_, w.ds)
+        by = sys_.store.shard_bytes(sys_.shard_plan.page_shard)
+        m["shard_mb"] = [round(b / 2**20, 2) for b in by]
+        m["balance"] = float(by.min() / by.max())
+        rows[S] = m
+    base = rows[1]["qps"]
+    for S, m in rows.items():
+        m["efficiency"] = m["qps"] / (S * base)
+    return rows
+
+
+def _regression_tenant_count() -> bool:
+    """Cold tenants never sampled by a skewed mix must stay in n_tenants."""
+    m = workload_mod.zipfian_mix([10] * 6, 12, s=3.0, seed=0)
+    return (
+        int(m.tenant_ids.max()) < 5        # premise: a cold tail exists
+        and m.n_tenants == 6
+        and m.counts().shape == (6,)
+        and int(m.counts().sum()) == 12
+    )
+
+
+def _regression_masked_merge() -> bool:
+    """dist_search masks invalid local lanes BEFORE the offset translation:
+    a pad lane (id -1, garbage distance) from an under-filled shard must
+    never win the merged top-k."""
+    import jax.numpy as jnp
+
+    from repro.velo import dist_search
+
+    g0, m0 = dist_search.mask_local_topk(
+        jnp.array([[0, 1, 2]]), jnp.array([[0.1, 0.2, 0.3]]), jnp.int32(0)
+    )
+    g1, m1 = dist_search.mask_local_topk(
+        jnp.array([[4, -1, -1]]), jnp.array([[0.05, 0.0, 0.0]]),
+        jnp.int32(100),
+    )
+    ids, d2 = dist_search.merge_topk(
+        jnp.concatenate([g0, g1], axis=1),
+        jnp.concatenate([m0, m1], axis=1), k=3
+    )
+    return (
+        g1.tolist() == [[104, -1, -1]]
+        and bool(jnp.isinf(m1[0, 1]))
+        and ids.tolist() == [[104, 0, 1]]
+        and bool(abs(d2[0, 0] - 0.05) < 1e-6)
+    )
+
+
+def run(quick: bool = True) -> dict:
+    parity = _parity_sweep()
+    scaling = _scaling(quick)
+
+    rows = []
+    for S, m in scaling.items():
+        rows.append([
+            f"S={S}", f"{m['qps']:.0f}", f"{m['efficiency']:.2f}",
+            f"{m['recall@k']:.3f}", m["scatter_ops"], m["shard_flushes"],
+            m["shard_merges"], f"{m['balance']:.2f}",
+        ])
+    text = common.fmt_table(
+        ["shards", "QPS", "eff", "recall", "scatter", "flushes", "merges",
+         "balance"],
+        rows,
+    )
+    text += "\nS=1 bitwise parity: " + "  ".join(
+        f"{a}={'ok' if ok else 'FAIL'}" for a, ok in parity.items()
+    )
+
+    recall_drift = abs(scaling[4]["recall@k"] - scaling[1]["recall@k"])
+    checks = {
+        # every algorithm runs bitwise-identically on the degenerate plane
+        **{f"s1_parity_{a}": ok for a, ok in parity.items()},
+        # near-linear scaling at flat recall, work spread across the shards
+        "scaling_efficiency_4shards":
+            scaling[4]["efficiency"] >= EFFICIENCY_FLOOR,
+        "recall_flat_across_shards": recall_drift <= RECALL_DRIFT,
+        "shard_bytes_balanced": scaling[4]["balance"] >= 0.9,
+        "merge_collective_active": scaling[4]["shard_merges"] > 0,
+        # the two bugfixes that rode in with the plane stay fixed
+        "regression_workload_tenant_count": _regression_tenant_count(),
+        "regression_dist_search_masked_merge": _regression_masked_merge(),
+    }
+    return {
+        "name": "sharded_serving",
+        "results": {"parity": parity,
+                    "scaling": {str(k): v for k, v in scaling.items()}},
+        "text": text,
+        "checks": checks,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="quick profile (the default; kept explicit for CI)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any claim check fails")
+    args = ap.parse_args()
+    res = run(quick=not args.full)
+    print(res["text"])
+    ok = True
+    for check, passed in res["checks"].items():
+        ok &= bool(passed)
+        print(f"  [{'PASS' if passed else 'FAIL'}] {check}")
+    if args.strict and not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,7 @@ MODULES = [
     "bench_index_size",      # Table 3
     "bench_fusion",          # cross-query fused dispatch: B x fuse-budget sweep
     "bench_multitenant",     # serving plane: shared pool vs partition under skew
+    "bench_sharded",         # sharded scatter-gather: S=1 parity + QPS scaling
 ]
 
 

@@ -45,6 +45,10 @@ ENGINE_OPS: dict[str, OpSpec] = {
                "charge simulated CPU seconds to the worker"),
         OpSpec("score", 1, False, "np.ndarray",
                "a ScoreRequest; may park in the rendezvous buffer"),
+        OpSpec("scatter", 1, True, "np.ndarray",
+               "a ShardScatter routing a ScoreRequest's rows to their "
+               "owning engine shards; may park in per-shard rendezvous "
+               "buffers until the shards flush and the slices merge"),
         OpSpec("read", 1, True, "{pid: bytes}",
                "blocking batched page read"),
         OpSpec("load_wait", 2, True, "record | None",

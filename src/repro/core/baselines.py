@@ -172,6 +172,15 @@ class SystemConfig:
     hbm_slots: int | None = None  # HBM tier slot count (None -> process
                                   # default, which falls back to the host
                                   # pool's slot count)
+    n_shards: int | None = None   # sharded scatter-gather serving plane
+                                  # (core.sharding): split the index image
+                                  # across this many engine shards, each with
+                                  # its own SSD, rendezvous buffer, and
+                                  # clock; score work scatters to the owning
+                                  # shards and merges per flush.  None/0 =
+                                  # unsharded.  n_shards=1 is bitwise
+                                  # identical to unsharded (the parity
+                                  # contract bench_sharded.py enforces).
     verify_protocol: bool = False  # arm the dynamic protocol checker
                                   # (repro.analysis.protocol): validates every
                                   # pool/HBM slot transition against the
@@ -195,6 +204,7 @@ class System:
     cost: CostModel
     hbm: object | None = None  # HbmTier when the device record tier is on
     checker: object | None = None  # ProtocolChecker when verify_protocol is on
+    shard_plan: object | None = None  # sharding.ShardPlan when n_shards is set
 
     def make_coroutine(self, qid: int, q: np.ndarray):
         return self.algorithm(self.ctx, q, self.config.params)
@@ -204,6 +214,13 @@ class System:
         schedule=None,
     ) -> tuple[list, WorkloadStats]:
         ssd = SSD(ssd_config)
+        shards = None
+        if self.shard_plan is not None:
+            # fresh per run, like the SSD: shard clocks start at zero and
+            # every shard's device starts idle
+            from repro.core import sharding as sharding_mod
+
+            shards = sharding_mod.ShardRouter(self.shard_plan, ssd_config)
         pool = getattr(self.ctx.accessor, "pool", None)
         pressure0 = (
             dict(pool.pressure_stats())
@@ -230,6 +247,7 @@ class System:
             hbm=self.hbm,
             schedule=schedule,
             verify=self.checker,
+            shards=shards,
         )
         if self.checker is not None:
             self.checker.raise_if_violations()
@@ -407,9 +425,17 @@ def build_system(
         raise ValueError(f"unknown system {name!r}")
 
     config = dataclasses.replace(config, batch_size=batch)
+    shard_plan = None
+    if config.n_shards:
+        # the sharded scatter-gather plane: page->shard ownership derived
+        # from the layout (pages are the affinity-preserving atomic unit)
+        from repro.core import sharding as sharding_mod
+
+        shard_plan = sharding_mod.plan_for_index(index, config.n_shards)
     hbm = None
     if (
         config.hbm_tier
+        and not config.n_shards  # tier rides the unsharded dispatch path
         and name != "inmemory"
         and isinstance(acc, RecordAccessor)
         and isinstance(index, VeloIndex)
@@ -449,6 +475,7 @@ def build_system(
         refine_cost_s=refine,
         dist=dist_engine,
         resident_ids=config.resident_plane,
+        shard_plan=shard_plan,
     )
     return System(
         name=name,
@@ -460,6 +487,7 @@ def build_system(
         cost=cost,
         hbm=hbm,
         checker=checker,
+        shard_plan=shard_plan,
     )
 
 
@@ -515,6 +543,10 @@ def evaluate(
         "resident_gathers": dist1.resident_gathers - dist0.resident_gathers,
         "score_requests_per_flush": stats.requests_per_flush,
         "score_rows_per_flush": stats.rows_per_flush,
+        "n_shards": system.config.n_shards or 0,
+        "scatter_ops": stats.scatter_ops,
+        "shard_flushes": stats.shard_flushes,
+        "shard_merges": stats.shard_merges,
         "hbm_tier": system.hbm is not None,
         "hbm_hits": stats.hbm_hits,
         "hbm_misses": stats.hbm_misses,

@@ -71,6 +71,25 @@ table they index (``ScoreRequest.qb``) and a diagnostic tenant tag; the
 flush core groups by ``distance.request_group_key`` so one rendezvous flush
 routes each (kind, table) group to its own fused call —
 ``WorkloadStats.cross_tenant_flushes`` counts flushes spanning tenants.
+
+Sharded scatter-gather (``Engine(shards=ShardRouter(...))``, core.sharding):
+the index image is split across N engine shards — each shard owns a page
+range (and so the records on it), a fresh SSD, a rendezvous buffer, and a
+clock.  Coroutines yield ``("scatter", ShardScatter)`` instead of
+``("score", ...)``: the router splits the request's rows by owning shard and
+each slice executes on ITS shard — inline on the shard clock when fusion is
+off, or parked in the shard's rendezvous buffer when fusion is on (flushed
+at ``fuse_rows`` per shard, or when every worker stalls — mirroring the
+shared-rendezvous stall rule).  A ``ScatterJoin`` reassembles the slices in
+row order and resumes the coroutine at the max part completion plus one
+``CostModel.shard_merge_s`` collective when more than one shard contributed
+(the dist_search all_gather + top_k merge, lifted into the engine).  Page
+reads route to the owning shard's SSD.  A scatter whose rows all land on one
+shard passes the ORIGINAL request through — with one shard every scatter
+does, every flush charge lands at the same time on the same clock, and the
+sharded engine is bitwise identical to the unsharded one (the S=1 parity
+contract; tests/test_sharding.py, benchmarks/bench_sharded.py).  Resident
+code tables upload once per (shard, table): each shard pins its own copy.
 """
 
 from __future__ import annotations
@@ -138,6 +157,9 @@ class Engine:
         verify=None,                # analysis.protocol.ProtocolChecker: runs
                                     # cheap pool invariants at flush
                                     # boundaries and end-of-run detectors
+        shards=None,                # core.sharding.ShardRouter: the sharded
+                                    # scatter-gather plane (None == unsharded;
+                                    # fresh per run, like the SSD)
     ):
         self.store = store
         self.ssd = ssd
@@ -148,6 +170,7 @@ class Engine:
         self.hbm = hbm
         self.schedule = schedule
         self.verify = verify
+        self.shards = shards
 
     def run(
         self,
@@ -162,6 +185,7 @@ class Engine:
         # pre-seam engine — tests/test_analysis.py pins that parity)
         sched = self.schedule
         verify = self.verify
+        router = self.shards
         workers = [_Worker(i) for i in range(cfg.n_workers)]
         query_queue: deque[int] = deque(range(len(queries)))
         start_time: dict[int, float] = {}
@@ -223,7 +247,11 @@ class Engine:
                 return comp, t
             if charge_submit:
                 t += self.cost.io_submit_s
-            comp = self.ssd.submit(t, cfg.page_size)
+            # sharded plane: the read executes on the device of the shard
+            # that owns the page (disjoint page ranges, so the global
+            # in-flight dedup above stays correct across shards)
+            dev = self.ssd if router is None else router.ssd_for_page(pid)
+            comp = dev.submit(t, cfg.page_size)
             inflight[pid] = comp
             heapq.heappush(inflight_heap, (comp, pid))
             stats.io_count += 1
@@ -285,16 +313,28 @@ class Engine:
         # One charge per DISTINCT table — a single-tenant run charges exactly
         # once (the PR-4 rule); the serving plane charges once per registered
         # tenant table (once total when the tenants share a combined table).
-        uploaded_tables: set[int] = set()
+        uploaded_tables: set = set()
 
-        def charge_upload(w: _Worker, reqs) -> None:
+        def upload_charge_s(reqs, shard: int | None = None) -> float:
+            """Seconds of one-time table pins owed by this batch.  On the
+            sharded plane each shard keeps its own distance executor, so the
+            pin is once per (shard, table) — with one shard that degenerates
+            to once per table, the unsharded rule."""
+            charge = 0.0
             for r in reqs:
                 if r.kind not in ("estimate", "refine"):
                     continue
                 qb = r.qb if r.qb is not None else self.qb
-                if qb is not None and id(qb) not in uploaded_tables:
-                    uploaded_tables.add(id(qb))
-                    w.t += self.cost.table_upload_s
+                if qb is None:
+                    continue
+                key = id(qb) if shard is None else (shard, id(qb))
+                if key not in uploaded_tables:
+                    uploaded_tables.add(key)
+                    charge += self.cost.table_upload_s
+            return charge
+
+        def charge_upload(w: _Worker, reqs) -> None:
+            w.t += upload_charge_s(reqs)
 
         def hbm_split(reqs) -> tuple[dict, dict]:
             """Resolve each id-payload refine request against the HBM tier:
@@ -418,6 +458,70 @@ class Engine:
                 else:
                     push_event(initiator.t, "resume", (wkr, gen, val, qid))
 
+        def flush_sharded(initiator: _Worker, only=None) -> None:
+            """Flush the per-shard rendezvous buffers — all of them at a
+            stall, or the budget-crossing subset ``only``.  Each shard's
+            parked slices dispatch on ITS OWN clock, starting no earlier than
+            the initiator's time, so shards execute in parallel with each
+            other.  A join whose every part completed resumes its coroutine
+            at the max part completion plus one merge collective (multi-shard
+            joins only); the initiator's own completed joins rejoin its ready
+            queue directly — the first switch-free, exactly the
+            ``flush_shared`` rule, which with ONE shard makes the charge
+            sequence and resume order bitwise identical to the unsharded
+            shared-rendezvous flush (the S=1 parity contract)."""
+            t0 = initiator.t
+            done: list = []
+            shard_ids = range(router.n_shards) if only is None else only
+            for s in shard_ids:
+                pend = router.pending[s]
+                if not pend:
+                    continue
+                router.pending[s] = []
+                router.pending_rows[s] = 0
+                reqs = [r for _, r, _ in pend]
+                st = max(router.shard_t[s], t0)
+                st += upload_charge_s(reqs, shard=s)
+                flop_by_group: dict[tuple, float] = {}
+                tenants_by_group: dict[tuple, set] = {}
+                for r in reqs:
+                    key = distance_mod.request_group_key(r, self.qb)
+                    flop_by_group[key] = flop_by_group.get(key, 0.0) + r.flop_s
+                    tenants_by_group.setdefault(key, set()).add(r.tenant)
+                for key, flop_s in flop_by_group.items():
+                    st += self.cost.fused_batch_s(flop_s, kind=key[0])
+                outs = distance_mod.execute_requests(self.dist, self.qb, reqs)
+                router.shard_t[s] = st
+                stats.score_flushes += len(flop_by_group)
+                stats.score_requests += len(reqs)
+                stats.score_rows += sum(r.rows for r in reqs)
+                stats.shard_flushes += 1
+                if any(len(ts) > 1 for ts in tenants_by_group.values()):
+                    stats.cross_tenant_flushes += 1
+                for (join, _, ridx), val in zip(pend, outs):
+                    if join.put(ridx, val, st):
+                        done.append(join)
+                if verify is not None:
+                    verify.at_flush()
+            first_own = True
+            for join in done:
+                t_done = join.t_done
+                if join.n_parts > 1:
+                    t_done += self.cost.shard_merge_s
+                    stats.shard_merges += 1
+                merged = join.merge()
+                if join.worker is initiator:
+                    initiator.t = max(initiator.t, t_done)
+                    initiator.ready.append(
+                        (join.gen, merged, join.qid, not first_own)
+                    )
+                    first_own = False
+                else:
+                    push_event(
+                        t_done, "resume",
+                        (join.worker, join.gen, merged, join.qid),
+                    )
+
         def run_worker_action(w: _Worker) -> None:
             """One scheduling action on worker w (paper Fig. 3b loop body)."""
             w.t += w.deferred_charge
@@ -509,6 +613,60 @@ class Engine:
                     if verify is not None:
                         # the per-query dispatch is the degenerate flush
                         # boundary (fusion off): same invariant cadence
+                        verify.at_flush()
+                elif kind == "scatter":
+                    sc = op[1]
+                    parts = router.split(sc)
+                    stats.scatter_ops += 1
+                    if cfg.fuse:
+                        # park each slice in its owning shard's rendezvous
+                        # buffer; flush every shard this scatter pushed over
+                        # the row budget (with one shard: exactly the shared
+                        # rendezvous budget rule)
+                        join = router.make_join(
+                            w, gen, qid, sc.req.rows, len(parts)
+                        )
+                        crossed = []
+                        for s, sub, ridx in parts:
+                            router.pending[s].append((join, sub, ridx))
+                            router.pending_rows[s] += sub.rows
+                            if router.pending_rows[s] >= cfg.fuse_rows:
+                                crossed.append(s)
+                        if crossed:
+                            flush_sharded(w, only=crossed)
+                        return  # parked in the per-shard rendezvous buffers
+                    # fusion off: each slice dispatches inline on its owning
+                    # shard's clock; the worker resumes at the last slice's
+                    # completion plus the merge collective (multi-shard only)
+                    t0 = w.t
+                    comp = t0
+                    merged = None
+                    out_rows = None
+                    for s, sub, ridx in parts:
+                        st = max(router.shard_t[s], t0)
+                        st += upload_charge_s((sub,), shard=s)
+                        st += self.cost.fused_batch_s(sub.flop_s)
+                        val = distance_mod.execute_requests(
+                            self.dist, self.qb, [sub]
+                        )[0]
+                        router.shard_t[s] = st
+                        comp = max(comp, st)
+                        if ridx is None:
+                            merged = val
+                        else:
+                            if out_rows is None:
+                                out_rows = np.empty(
+                                    sc.req.rows, dtype=np.asarray(val).dtype
+                                )
+                            out_rows[ridx] = val
+                    if len(parts) > 1:
+                        comp += self.cost.shard_merge_s
+                        stats.shard_merges += 1
+                    w.t = comp
+                    value = merged if merged is not None else out_rows
+                    if verify is not None:
+                        # per-query sharded dispatch: the degenerate flush
+                        # boundary, same cadence as the fuse-off score path
                         verify.at_flush()
                 elif kind == "load_wait":
                     _, vid, pool = op
@@ -658,6 +816,38 @@ class Engine:
                 flush_shared(initiator)
                 run_worker_action(initiator)
                 drain_pool_resumes(initiator.t)
+            elif router is not None and router.has_pending():
+                # every worker is stalled: flush EVERY shard's rendezvous
+                # buffer (the sharded twin of the shared-rendezvous stall
+                # rule).  The earliest-clock worker owning a parked join
+                # initiates; each shard dispatches on its own clock from the
+                # initiator's time, so the flush work itself scales out.
+                contributors: dict[int, _Worker] = {}
+                for plist in router.pending:
+                    for join, _, _ in plist:
+                        contributors.setdefault(id(join.worker), join.worker)
+                if sched is None:
+                    initiator = min(
+                        contributors.values(), key=lambda x: (x.t, x.wid)
+                    )
+                else:
+                    initiator = min(
+                        contributors.values(),
+                        key=lambda x: (x.t, sched.worker_rank(x.wid)),
+                    )
+                    if sum(1 for x in contributors.values()
+                           if x.t == initiator.t) > 1:
+                        sched.ties["worker"] += 1
+                if next_event_t is not None and next_event_t <= initiator.t:
+                    # completions already due run before the stall flush —
+                    # the same apply-first rule as the shared branch (the
+                    # overlap refinement is a shared-rendezvous feature; the
+                    # sharded plane always drains first)
+                    apply_due_events(initiator.t)
+                    continue
+                flush_sharded(initiator)
+                run_worker_action(initiator)
+                drain_pool_resumes(initiator.t)
             elif events:
                 t0 = events[0][0]
                 apply_due_events(t0)  # busy-poll: jump to next completion
@@ -665,6 +855,11 @@ class Engine:
                 break
 
         stats.makespan_s = max((w.t for w in workers), default=0.0)
+        if router is not None:
+            # every shard's final flush feeds a join some worker resumed at
+            # or after it, so this max is the worker max already — kept
+            # explicit so the invariant cannot silently rot
+            stats.makespan_s = max([stats.makespan_s, *router.shard_t])
         if verify is not None:
             verify.at_end()
         if hbm_c0 is not None:
@@ -694,6 +889,7 @@ def run_workload(
     hbm=None,
     schedule=None,
     verify=None,
+    shards=None,
 ) -> tuple[list, WorkloadStats]:
     """Convenience wrapper: build an engine, run all queries, return results+stats."""
     engine = Engine(
@@ -710,5 +906,6 @@ def run_workload(
         hbm=hbm,
         schedule=schedule,
         verify=verify,
+        shards=shards,
     )
     return engine.run(make_coroutine, queries)

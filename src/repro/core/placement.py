@@ -39,6 +39,25 @@ class Layout:
 PayloadFn = Callable[[int], bytes]
 
 
+def shard_pages(n_pages: int, n_shards: int) -> np.ndarray:
+    """Assign pages to engine shards: contiguous balanced ranges.
+
+    Pages are the atomic sharding unit because the affinity layout never
+    splits an affinity group across pages except as a last resort (§3.4) — so
+    page-granular sharding preserves the co-placement property that one fetch
+    serves many hops, now against the shard that owns the data.  Contiguous
+    ranges additionally keep affinity-adjacent PAGES (placed back-to-back by
+    the greedy fill) on one shard.  ``shard_of[p] = floor(p * S / P)`` gives
+    every shard ``P/S`` pages within one of each other, deterministically.
+    """
+    assert n_shards >= 1
+    if n_pages == 0:
+        return np.empty(0, dtype=np.int32)
+    return (
+        (np.arange(n_pages, dtype=np.int64) * n_shards) // n_pages
+    ).astype(np.int32)
+
+
 def _flush(builder: PageBuilder, pages: list[bytes]) -> PageBuilder:
     if builder.count():
         pages.append(builder.finalize())

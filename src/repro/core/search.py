@@ -52,6 +52,7 @@ from bisect import insort
 import numpy as np
 
 from repro.core import distance as distance_mod
+from repro.core import sharding as sharding_mod
 from repro.core.quant import RabitQuantizer
 from repro.core.sim import CostModel
 
@@ -91,6 +92,11 @@ class SearchContext:
     table_qb: object | None = None  # table requests index (None -> qb)
     vid_base: int = 0               # offset into the combined-table rows
     tenant: int = 0                 # tenant tag on every score op
+    # sharded scatter-gather plane (core.sharding): when set, score work is
+    # yielded as ("scatter", ShardScatter) ops routing each row to the engine
+    # shard that owns its record — the algorithm itself stays unchanged (the
+    # default, None, keeps the single-engine ("score", ...) wire format)
+    shard_plan: object | None = None
 
     def __post_init__(self):
         if self.dist is None:
@@ -452,6 +458,23 @@ def _fresh_union(beam: "_Beam", recs: list) -> list[int]:
     return fresh
 
 
+def _dispatch_score(ctx: SearchContext, req, vids):
+    """Yield one score op through the active dispatch plane: the single
+    engine ("score"), or — when ``ctx.shard_plan`` is set — the sharded
+    scatter-gather plane ("scatter"), routing each row to the engine shard
+    owning its record.  ``vids`` are the LOCAL vertex ids of the request's
+    rows, in row order (routing is computed before any serving-plane
+    ``vid_base`` shift, so it is independent of the table namespace)."""
+    if ctx.shard_plan is None:
+        out = yield ("score", req)
+        return out
+    scatter = sharding_mod.ShardScatter(
+        req=req, shard_rows=ctx.shard_plan.shards_of(vids)
+    )
+    out = yield ("scatter", scatter)
+    return out
+
+
 def _estimate_scores(ctx: SearchContext, pq, ids: list[int]):
     """Yield one level-1 score op for ``ids``; returns the estimate array.
     The engine charges the batch's flops plus an amortized dispatch — shared
@@ -468,7 +491,7 @@ def _estimate_scores(ctx: SearchContext, pq, ids: list[int]):
         qb=ctx.table_qb,
         tenant=ctx.tenant,
     )
-    ests = yield ("score", req)
+    ests = yield from _dispatch_score(ctx, req, ids)
     return ests
 
 
@@ -490,7 +513,7 @@ def _refine_records(ctx: SearchContext, pq, recs: list):
         qb=ctx.table_qb if kind != "full" else None,
         tenant=ctx.tenant,
     )
-    dists = yield ("score", req)
+    dists = yield from _dispatch_score(ctx, req, [r.vid for r in recs])
     return dists
 
 
@@ -749,7 +772,8 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     d = base.shape[1]
     graph = ctx.index.graph
 
-    def full_scores(vectors: np.ndarray):
+    def full_scores(vids: list[int]):
+        vectors = base[np.asarray(vids)]
         req = distance_mod.ScoreRequest(
             kind="full",
             rows=vectors.shape[0],
@@ -758,12 +782,12 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
             query=np.asarray(q, dtype=np.float32),
             tenant=ctx.tenant,
         )
-        out = yield ("score", req)
+        out = yield from _dispatch_score(ctx, req, vids)
         return out
 
     beam = _Beam(p.L)
     beam.insert(
-        ctx.medoid, float((yield from full_scores(base[[ctx.medoid]]))[0])
+        ctx.medoid, float((yield from full_scores([ctx.medoid]))[0])
     )
     hops = 0
     while True:
@@ -776,7 +800,7 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
         nbrs = [int(u) for u in graph.neighbors(v) if int(u) not in beam.seen]
         if nbrs:
             yield ("compute", cost.visit_overhead_s)
-            d2 = yield from full_scores(base[np.asarray(nbrs)])
+            d2 = yield from full_scores(nbrs)
             for u, e in zip(nbrs, d2):
                 beam.insert(u, float(e))
 

@@ -455,8 +455,21 @@ class ServingPlane:
     ) -> PlaneRun:
         """Run a mixed arrival stream through the one engine; split the
         results and the serving metrics by tenant.  Stats are per-run deltas
-        (idempotent across repeated runs on one plane)."""
+        (idempotent across repeated runs on one plane).
+
+        Tenant-count honesty: ``workload.n_tenants`` carries the TRUE tenant
+        count from the generator — a cold tenant that drew zero arrivals
+        still counts (the per-tenant split below reports its empty row
+        instead of silently dropping it).  The guard rejects workloads
+        generated for more tenants than the plane serves, which used to slip
+        through whenever the excess tenants happened to draw no arrivals.
+        (Scaling one tenant's INDEX across engine shards is the orthogonal
+        axis — see docs/sharding.md.)"""
         tenants = self.tenants
+        assert workload.n_tenants <= len(tenants), (
+            f"workload generated for {workload.n_tenants} tenants, plane "
+            f"serves {len(tenants)}"
+        )
         queries = [
             tenants[int(t)].spec.queries[int(j)]
             for t, j in zip(workload.tenant_ids, workload.query_ids)

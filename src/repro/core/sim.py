@@ -90,6 +90,14 @@ class CostModel:
                                          # memory (no host decode / upload), so
                                          # the per-dim cost drops to near the
                                          # binary-scan rate
+    shard_merge_s: float = 2e-6          # one small collective merging the
+                                         # per-shard candidate slices of a
+                                         # scattered score op into the global
+                                         # result (the all_gather + top_k
+                                         # idiom of repro.velo.dist_search);
+                                         # charged once per multi-shard
+                                         # scatter, never when one shard owns
+                                         # every row (S=1 parity)
 
     def estimate(self, count: int, dim: int) -> float:
         """Level-1 binary distance estimates for `count` vertices."""
@@ -152,6 +160,12 @@ class WorkloadStats:
                                    # more than one tenant (serving plane)
     overlap_flushes: int = 0   # shared-rendezvous flushes issued while another
                                # worker's completions were still in flight
+    # sharded scatter-gather serving plane (core.sharding)
+    scatter_ops: int = 0       # scatter ops routed to owning shards
+    shard_flushes: int = 0     # per-shard rendezvous flushes
+    shard_merges: int = 0      # cross-shard top-k merges (multi-shard
+                               # scatters only; single-shard scatters pass
+                               # the owning shard's results through)
     # HBM record-cache tier (device-resident hot records above the host pool)
     hbm_hits: int = 0          # record lookups served from HBM cache slots
     hbm_misses: int = 0        # lookups that fell through to the host pool

@@ -62,6 +62,18 @@ class PageStore:
     def disk_bytes(self) -> int:
         return len(self.pages) * self.page_size
 
+    def shard_bytes(self, page_shard: "np.ndarray") -> "np.ndarray":
+        """Per-shard disk footprint under a page->shard assignment
+        (core.sharding): how evenly the scatter-gather plane splits the index
+        image across the engine shards.  The balance diagnostic the sharded
+        benchmark reports alongside scaling efficiency."""
+        assert len(page_shard) == len(self.pages)
+        n_shards = int(page_shard.max()) + 1 if len(page_shard) else 0
+        counts = np.bincount(
+            np.asarray(page_shard, dtype=np.int64), minlength=n_shards
+        )
+        return counts * self.page_size
+
 
 # ------------------------------------------------------------------ VeloIndex
 

@@ -48,16 +48,24 @@ class MixedWorkload:
     name: str
     tenant_ids: np.ndarray   # (m,) int64 — tenant of each arriving query
     query_ids: np.ndarray    # (m,) int64 — index into that tenant's query set
+    # True tenant count, carried from the generator.  Deriving it from
+    # ``tenant_ids.max()+1`` silently drops cold tenants that drew zero
+    # arrivals (heavy zipf s, short streams) and skews per-tenant accounting.
+    n_tenants: int = 0
 
     def __post_init__(self):
         assert self.tenant_ids.shape == self.query_ids.shape
+        if self.n_tenants == 0 and len(self):
+            # Back-compat for hand-built workloads: fall back to the observed
+            # maximum (the old, lossy derivation) only when no count is given.
+            object.__setattr__(
+                self, "n_tenants", int(self.tenant_ids.max()) + 1
+            )
+        if len(self):
+            assert int(self.tenant_ids.max()) < self.n_tenants
 
     def __len__(self) -> int:
         return int(self.tenant_ids.shape[0])
-
-    @property
-    def n_tenants(self) -> int:
-        return int(self.tenant_ids.max()) + 1 if len(self) else 0
 
     def counts(self) -> np.ndarray:
         """Arrivals per tenant."""
@@ -102,6 +110,7 @@ def uniform_mix(
         name="uniform",
         tenant_ids=tenants,
         query_ids=_sequential_query_ids(tenants, queries_per_tenant),
+        n_tenants=int(queries_per_tenant.shape[0]),
     )
 
 
@@ -122,6 +131,7 @@ def zipfian_mix(
         name=f"zipf(s={s:g})",
         tenant_ids=tenants,
         query_ids=_sequential_query_ids(tenants, queries_per_tenant),
+        n_tenants=n_tenants,
     )
 
 
@@ -151,6 +161,7 @@ def bursty_mix(
         name=f"bursty(b={mean_burst:g})",
         tenant_ids=tenants,
         query_ids=_sequential_query_ids(tenants, queries_per_tenant),
+        n_tenants=n_tenants,
     )
 
 

@@ -41,6 +41,34 @@ def local_search_fn(mode: str, L: int, k: int, max_steps: int, interpret: bool):
     return run
 
 
+def mask_local_topk(
+    ids: jnp.ndarray, d2: jnp.ndarray, offset: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Translate one shard's local top-k to global ids, masking invalid lanes.
+
+    Under-filled shards pad their local top-k with sentinel ids (< 0).  Adding
+    the shard's base offset to a sentinel produces a VALID-LOOKING global id
+    (offset - 1 etc.) that can win the merged top-k — so the mask must be
+    applied to the LOCAL ids, before translation: invalid lanes keep id -1 and
+    get distance +inf, which loses every top-k comparison after the gather.
+    """
+    valid = ids >= 0
+    gids = jnp.where(
+        valid, ids.astype(jnp.int32) + offset.astype(jnp.int32), -1
+    )
+    d2 = jnp.where(valid, d2, jnp.inf)
+    return gids, d2
+
+
+def merge_topk(
+    gids_all: jnp.ndarray, d2_all: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Global top-k over the gathered (B, S*k) candidate set."""
+    neg, sel = jax.lax.top_k(-d2_all, k)
+    out_ids = jnp.take_along_axis(gids_all, sel, axis=1)
+    return out_ids, -neg
+
+
 def make_distributed_search(
     mesh,
     axis_names: tuple[str, ...],
@@ -57,16 +85,13 @@ def make_distributed_search(
 
     def searcher(index: DeviceIndex, offset: jnp.ndarray, queries: jnp.ndarray):
         ids, d2 = local(index, queries)                    # local shard results
-        gids = ids.astype(jnp.int32) + offset.astype(jnp.int32)  # (B, k) global
+        # (B, k) global ids, invalid lanes masked BEFORE the gather
+        gids_all, d2_all = mask_local_topk(ids, d2, offset)
         # merge: gather every shard's candidates, then global top-k
-        gids_all = gids
-        d2_all = d2
         for ax in all_axes:
             gids_all = jax.lax.all_gather(gids_all, ax, axis=1, tiled=True)
             d2_all = jax.lax.all_gather(d2_all, ax, axis=1, tiled=True)
-        neg, sel = jax.lax.top_k(-d2_all, k)
-        out_ids = jnp.take_along_axis(gids_all, sel, axis=1)
-        return out_ids, -neg
+        return merge_topk(gids_all, d2_all, k)
 
     index_specs = DeviceIndex(
         centroid=P(), rotation=P(),

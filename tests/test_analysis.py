@@ -24,7 +24,7 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.analysis import run_lint, run_lint_text
+from repro.analysis import registry, run_lint, run_lint_text
 from repro.analysis.explore import (
     SchedulePolicy,
     _smoke_fixture,
@@ -110,8 +110,7 @@ def _dispatcher(*names: str) -> str:
     return "\n".join(lines) + "\n"
 
 
-ALL_OPS = ("compute", "score", "read", "load_wait", "submit_cb", "submit",
-           "wait_any")
+ALL_OPS = tuple(registry.ENGINE_OPS)  # every registered op, no hand copy
 
 
 class TestOpDispatch:

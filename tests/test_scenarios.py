@@ -190,3 +190,40 @@ def test_scenario_matrix_verify_protocol_inert(algo, fuse, shared, tiny):
     assert sys_v.checker is not None, f"{label}: checker never armed"
     sys_v.checker.raise_if_violations()
     assert sys_v.checker.flushes > 0, f"{label}: no flush boundary observed"
+
+
+@pytest.mark.parametrize("fuse", [False, True], ids=["nofuse", "fuse"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_scenario_matrix_sharded_verify_inert(algo, fuse, tiny):
+    """The sharded row of the matrix: {n_shards=2} x {fuse} x
+    {verify_protocol}.  The protocol checker observes flush boundaries PER
+    SHARD (flush_sharded calls at_flush once per shard flush, the fuse-off
+    scatter path once per inline dispatch) and stays bitwise inert."""
+    ds, graph, qb = tiny
+
+    def run(verify):
+        cfg = baselines.SystemConfig(
+            buffer_ratio=0.2, n_workers=2, batch_size=4,
+            fuse=fuse, async_load=True, n_shards=2,
+            verify_protocol=verify,
+            params=SearchParams(L=24, W=4),
+        )
+        sys_ = baselines.build_system(algo, ds.base, graph, qb, cfg)
+        results, stats = sys_.run(ds.queries)
+        return sys_, results, stats
+
+    _, ref, ref_stats = run(False)
+    sys_v, got, stats = run(True)
+    label = f"{algo}/sharded/fuse={fuse}/verify"
+    assert [
+        (list(r.ids), list(r.dists), r.hops) for r in got
+    ] == [
+        (list(r.ids), list(r.dists), r.hops) for r in ref
+    ], f"{label}: verified run diverged from unverified run"
+    rec = _recall(got, ds)
+    assert rec >= RECALL_FLOOR[algo], f"{label}: recall {rec:.3f}"
+    assert stats.scatter_ops > 0, f"{label}: scatter path never taken"
+    assert stats.scatter_ops == ref_stats.scatter_ops, label
+    assert sys_v.checker is not None, f"{label}: checker never armed"
+    sys_v.checker.raise_if_violations()
+    assert sys_v.checker.flushes > 0, f"{label}: no flush boundary observed"

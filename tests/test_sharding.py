@@ -1,0 +1,277 @@
+"""Sharded scatter-gather serving plane: parity, scaling, and the two bugfix
+regressions that rode in with it.
+
+The load-bearing contract (docs/sharding.md): with ONE shard the sharded
+engine is bitwise identical to the unsharded engine — same ids, same dists,
+same hops, same makespan, same per-query latencies — for all five algorithms
+in both fuse modes.  Everything the router adds (per-shard SSDs, clocks,
+rendezvous buffers, the merge collective) must degenerate exactly at S=1.
+
+Across shard counts only recall flatness is asserted for velo (its async
+read completion order is legitimately timing-dependent); diskann's blocking
+reads make it bitwise-stable at ANY shard count on one worker, which is
+pinned too.
+
+Bugfix regressions carried by this PR:
+  * workload generators report the REQUESTED tenant count even when skew
+    leaves some tenants never sampled (n_tenants used to be derived from
+    ``tenant_ids.max() + 1``);
+  * dist_search's shard merge masks invalid local-top-k lanes BEFORE the
+    global-id offset translation (a sentinel id plus an offset used to look
+    like a valid neighbor of the previous shard).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core import dataset as dataset_mod
+from repro.core import placement as placement_mod
+from repro.core import sharding as sharding_mod
+from repro.core import vamana as vamana_mod
+from repro.core import workload as workload_mod
+from repro.core.distance import ScoreRequest
+from repro.core.quant import RabitQuantizer
+from repro.core.search import ALGORITHMS, SearchParams
+
+ALGOS = sorted(ALGORITHMS)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    ds = dataset_mod.make_dataset(n=600, d=32, n_queries=12, k=10, seed=4)
+    graph = vamana_mod.build_vamana(ds.base, R=12, L=24, batch_size=256,
+                                    seed=4)
+    qb = RabitQuantizer(32, seed=4).fit_encode(ds.base)
+    return ds, graph, qb
+
+
+def _run(tiny, algo, n_shards, fuse, n_workers=1):
+    ds, graph, qb = tiny
+    cfg = baselines.SystemConfig(
+        buffer_ratio=0.2, n_workers=n_workers, batch_size=4, fuse=fuse,
+        n_shards=n_shards, params=SearchParams(L=24, W=4),
+    )
+    sys_ = baselines.build_system(algo, ds.base, graph, qb, cfg)
+    results, stats = sys_.run(ds.queries)
+    return sys_, results, stats
+
+
+def _recall(results, ds):
+    ids = np.full((len(results), 10), -1, dtype=np.int64)
+    for i, r in enumerate(results):
+        m = min(10, len(r.ids))
+        ids[i, :m] = r.ids[:m]
+    return dataset_mod.recall_at_k(ids, ds.groundtruth, 10)
+
+
+# ------------------------------------------------------------ plan mechanics
+
+
+def test_shard_pages_contiguous_and_balanced():
+    for n_pages, n_shards in [(7, 2), (16, 4), (5, 5), (9, 1), (100, 3)]:
+        ps = placement_mod.shard_pages(n_pages, n_shards)
+        assert ps.shape == (n_pages,) and ps.dtype == np.int32
+        # contiguous: shard id never decreases page-to-page
+        assert (np.diff(ps) >= 0).all(), (n_pages, n_shards)
+        counts = np.bincount(ps, minlength=n_shards)
+        assert counts.sum() == n_pages
+        # balanced within one page
+        assert counts.max() - counts.min() <= 1, (n_pages, n_shards, counts)
+
+
+def test_plan_for_index_routes_every_vid(tiny):
+    ds, graph, qb = tiny
+    sys_ = _run(tiny, "velo", 3, True)[0]
+    plan = sys_.shard_plan
+    assert plan is not None and plan.n_shards == 3
+    n = ds.base.shape[0]
+    shards = plan.shards_of(np.arange(n))
+    assert shards.shape == (n,)
+    assert set(np.unique(shards)) <= set(range(3))
+    # vid ownership agrees with page ownership, and every shard owns bytes
+    by = sys_.store.shard_bytes(plan.page_shard)
+    assert by.shape == (3,) and (by > 0).all()
+    assert by.sum() == plan.page_shard.size * sys_.store.page_size
+    np.testing.assert_array_equal(
+        plan.shard_page_counts(), np.bincount(plan.page_shard, minlength=3)
+    )
+
+
+# ------------------------------------------------------ split/join mechanics
+
+
+def _req(rows, payload):
+    return ScoreRequest(kind="estimate", rows=rows, flop_s=1.0,
+                        payload=payload)
+
+
+def _router(shard_of_vid):
+    vid_shard = np.asarray(shard_of_vid, dtype=np.int32)
+    plan = sharding_mod.ShardPlan(
+        n_shards=int(vid_shard.max()) + 1,
+        page_shard=vid_shard.copy(), vid_shard=vid_shard,
+    )
+    return sharding_mod.ShardRouter(plan)
+
+
+def test_split_single_shard_passes_original_request_through():
+    router = _router([0, 0, 1])
+    req = _req(2, np.array([10, 11]))
+    parts = router.split(sharding_mod.ShardScatter(req, np.array([1, 1])))
+    assert len(parts) == 1
+    s, sub, ridx = parts[0]
+    assert s == 1 and ridx is None
+    assert sub is req  # untouched: the S=1 bitwise parity lever
+
+
+def test_split_uneven_rows_and_flops():
+    router = _router([0, 1])
+    req = _req(5, np.array([7, 8, 9, 10, 11]))
+    shards = np.array([1, 0, 1, 1, 0])
+    parts = router.split(sharding_mod.ShardScatter(req, shards))
+    assert [p[0] for p in parts] == [0, 1]
+    (_, sub0, r0), (_, sub1, r1) = parts
+    np.testing.assert_array_equal(r0, [1, 4])
+    np.testing.assert_array_equal(r1, [0, 2, 3])
+    assert sub0.rows == 2 and sub1.rows == 3
+    np.testing.assert_array_equal(sub0.payload, [8, 11])
+    np.testing.assert_array_equal(sub1.payload, [7, 9, 10])
+    # flop cost splits proportionally and conserves the total
+    assert abs(sub0.flop_s + sub1.flop_s - req.flop_s) < 1e-12
+
+
+def test_split_tuple_payload_slices_every_element():
+    router = _router([0, 1])
+    codes = np.arange(12).reshape(3, 4)
+    lo = np.array([0.0, 1.0, 2.0])
+    step = np.array([0.1, 0.2, 0.3])
+    req = _req(3, (codes, lo, step))
+    parts = router.split(
+        sharding_mod.ShardScatter(req, np.array([1, 0, 1]))
+    )
+    (_, sub0, _), (_, sub1, _) = parts
+    np.testing.assert_array_equal(sub0.payload[0], codes[[1]])
+    np.testing.assert_array_equal(sub1.payload[1], lo[[0, 2]])
+    np.testing.assert_array_equal(sub1.payload[2], step[[0, 2]])
+
+
+def test_scatter_join_reassembles_rows_at_max_time():
+    join = sharding_mod.ScatterJoin(None, None, 0, rows=4, n_parts=2)
+    assert not join.put(np.array([1, 3]), np.array([10.0, 30.0]), t=5.0)
+    assert join.put(np.array([0, 2]), np.array([0.0, 20.0]), t=3.0)
+    np.testing.assert_array_equal(join.merge(), [0.0, 10.0, 20.0, 30.0])
+    assert join.t_done == 5.0
+    # single-part joins hand the result object back untouched
+    direct = sharding_mod.ScatterJoin(None, None, 0, rows=2, n_parts=1)
+    val = np.array([1.0, 2.0])
+    assert direct.put(None, val, t=1.0)
+    assert direct.merge() is val
+
+
+# ------------------------------------------------- the S=1 parity contract
+
+
+@pytest.mark.parametrize("fuse", [False, True], ids=["nofuse", "fuse"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_s1_bitwise_parity_with_unsharded(algo, fuse, tiny):
+    _, ref, ref_stats = _run(tiny, algo, None, fuse)
+    sys_s, got, got_stats = _run(tiny, algo, 1, fuse)
+    label = f"{algo}/fuse={fuse}"
+    assert [
+        (list(r.ids), list(r.dists), r.hops) for r in got
+    ] == [
+        (list(r.ids), list(r.dists), r.hops) for r in ref
+    ], f"{label}: sharded S=1 diverged from unsharded"
+    # the clocks agree to the last bit too: same makespan, same per-query
+    # latencies — the router's charge/resume order IS the unsharded order
+    assert got_stats.makespan_s == ref_stats.makespan_s, label
+    assert got_stats.latencies == ref_stats.latencies, label
+    assert got_stats.scatter_ops > 0, f"{label}: scatter path never taken"
+    assert sys_s.shard_plan is not None
+
+
+def test_diskann_bitwise_stable_across_shard_counts(tiny):
+    """Blocking-read algorithms see identical distance values regardless of
+    how the fused batches regroup per shard, so their RESULTS (not clocks)
+    are bitwise stable at any S on one worker."""
+    _, ref, _ = _run(tiny, "diskann", 1, True)
+    for S in (2, 4):
+        _, got, stats = _run(tiny, "diskann", S, True)
+        assert [
+            (list(r.ids), list(r.dists), r.hops) for r in got
+        ] == [
+            (list(r.ids), list(r.dists), r.hops) for r in ref
+        ], f"S={S}"
+        assert stats.shard_flushes > 0 and stats.shard_merges > 0
+
+
+@pytest.mark.parametrize("fuse", [False, True], ids=["nofuse", "fuse"])
+def test_velo_recall_flat_across_shard_counts(fuse, tiny):
+    ds = tiny[0]
+    base = _recall(_run(tiny, "velo", 1, fuse)[1], ds)
+    for S in (2, 4):
+        _, got, stats = _run(tiny, "velo", S, fuse)
+        rec = _recall(got, ds)
+        assert abs(rec - base) <= 0.05, f"S={S}: {rec:.3f} vs {base:.3f}"
+        assert stats.scatter_ops > 0
+        if fuse:
+            assert stats.shard_flushes > 0
+        assert stats.shard_merges > 0, f"S={S}: no multi-shard merges"
+
+
+# ------------------------------------------------------- bugfix regressions
+
+
+def test_workload_n_tenants_survives_never_sampled_tenants():
+    """Heavy zipfian skew on few ops leaves cold tenants unsampled; the
+    generator must still report the REQUESTED tenant count (the old
+    ``tenant_ids.max() + 1`` derivation silently dropped the cold tail,
+    desynchronizing counts()/positions() from the serving plane's roster)."""
+    m = workload_mod.zipfian_mix([10] * 6, 12, s=3.0, seed=0)
+    assert int(m.tenant_ids.max()) < 5  # the premise: a cold tail exists
+    assert m.n_tenants == 6
+    counts = m.counts()
+    assert counts.shape == (6,)
+    assert counts.sum() == 12
+    # cold tenants are present with zero ops, not absent
+    assert (counts[int(m.tenant_ids.max()) + 1:] == 0).all()
+    # back-compat: a workload built without the count still self-derives
+    legacy = workload_mod.MixedWorkload(
+        name=m.name, tenant_ids=m.tenant_ids.copy(),
+        query_ids=m.query_ids.copy(),
+    )
+    assert legacy.n_tenants == int(m.tenant_ids.max()) + 1
+
+
+def test_dist_search_merge_masks_before_offset():
+    """An under-filled shard pads its local top-k with id -1 lanes carrying
+    garbage distances.  The merge must mask those lanes BEFORE adding the
+    shard's global-id offset — offset + (-1) is a valid-looking id of the
+    neighboring shard, and an unmasked garbage distance can win the top-k."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.velo import dist_search
+
+    # shard 1 found only one real neighbor; its pad lanes carry tiny
+    # (garbage) distances that would win an unmasked merge
+    ids0 = jnp.array([[0, 1, 2]])
+    d20 = jnp.array([[0.1, 0.2, 0.3]])
+    ids1 = jnp.array([[4, -1, -1]])
+    d21 = jnp.array([[0.05, 0.0, 0.0]])
+
+    g0, m0 = dist_search.mask_local_topk(ids0, d20, jnp.int32(0))
+    g1, m1 = dist_search.mask_local_topk(ids1, d21, jnp.int32(100))
+    assert g1.tolist() == [[104, -1, -1]]
+    assert m1[0, 1] == jnp.inf and m1[0, 2] == jnp.inf
+
+    gids = jnp.concatenate([g0, g1], axis=1)
+    d2 = jnp.concatenate([m0, m1], axis=1)
+    out_ids, out_d2 = dist_search.merge_topk(gids, d2, k=3)
+    assert out_ids.tolist() == [[104, 0, 1]]
+    np.testing.assert_allclose(np.asarray(out_d2), [[0.05, 0.1, 0.2]])
+    # k larger than the valid candidate pool: sentinels may fill the tail
+    # but only at +inf — they can never displace a real neighbor
+    out_ids6, out_d26 = dist_search.merge_topk(gids, d2, k=6)
+    tail = np.asarray(out_d26)[0, 4:]
+    assert np.isinf(tail).all()
+    assert out_ids6.tolist()[0][:4] == [104, 0, 1, 2]
