@@ -40,12 +40,27 @@ from benchmarks import common
 
 import numpy as np  # noqa: E402
 
+from repro.core import beam as beam_mod  # noqa: E402
 from repro.core import distance as distance_mod  # noqa: E402
 from repro.core.quant import RabitQuantizer  # noqa: E402
 
 # CostModel fields the emitted overrides may set; everything else in the
 # record is diagnostic and ignored by baselines.apply_calibration.
-COST_FIELDS = ("batch_dispatch_s", "full_dispatch_s", "table_upload_s")
+COST_FIELDS = (
+    "batch_dispatch_s", "full_dispatch_s", "table_upload_s", "beam_step_s",
+)
+
+
+def _beam_req(qb, pq, state, ids):
+    """A minimal level-1 BeamRequest for micro-timing (flop_s is cost-model
+    input only — the engine never reads it)."""
+    return beam_mod.BeamRequest(
+        kind="estimate", state=state, fresh=np.asarray(ids, np.int64),
+        explored=np.zeros(0, np.int64),
+        insert_ids=np.zeros(0, np.int64),
+        insert_ds=np.zeros(0, np.float32),
+        rows=int(np.asarray(ids).size), flop_s=0.0, pq=pq, qb=qb,
+    )
 
 
 def _best_of(fn, reps: int) -> float:
@@ -95,6 +110,22 @@ def calibrate_backend(
     full_row_s = max(tf_big - tf_small, 0.0) / max(big - 1, 1)
     full_dispatch_s = max(tf_small - full_row_s, 1e-9)
 
+    # fused beam step: the same two-point fit over beam_step_many — the
+    # single launch that scores, masks, merges, and selects the frontier.
+    # The states/requests are prebuilt OUTSIDE the timed region (repeat
+    # steps re-score the same rows against an already-visited mask: the
+    # kernel work per row is identical, which is all the fit needs).
+    st_small = eng.beam_new(64, n)
+    st_big = eng.beam_new(64, n)
+    rq_small = _beam_req(qb, pq, st_small, ids_small)
+    rq_big = _beam_req(qb, pq, st_big, ids_big)
+    eng.beam_step_many(qb, [rq_small])
+    eng.beam_step_many(qb, [rq_big])
+    tb_small = _best_of(lambda: eng.beam_step_many(qb, [rq_small]), reps)
+    tb_big = _best_of(lambda: eng.beam_step_many(qb, [rq_big]), reps)
+    beam_row_s = max(tb_big - tb_small, 0.0) / max(big - 1, 1)
+    beam_step_s = max(tb_small - beam_row_s, 1e-9)
+
     # time ONLY register_index (the table pin), not engine construction:
     # registration is idempotent per engine, so each rep needs a fresh engine
     # — built outside the timed region
@@ -110,8 +141,10 @@ def calibrate_backend(
         "batch_dispatch_s": dispatch_s,
         "full_dispatch_s": full_dispatch_s,
         "table_upload_s": upload_s,
+        "beam_step_s": beam_step_s,
         "estimate_row_s": row_s,
         "full_row_s": full_row_s,
+        "beam_row_s": beam_row_s,
         "n": n,
         "d": d,
         "big": big,
@@ -138,13 +171,14 @@ def run(quick: bool = True, backends: list[str] | None = None) -> dict:
     rows = [
         [name, rec["backend"], f"{rec['batch_dispatch_s'] * 1e6:.2f}",
          f"{rec['full_dispatch_s'] * 1e6:.2f}",
+         f"{rec['beam_step_s'] * 1e6:.2f}",
          f"{rec['estimate_row_s'] * 1e9:.1f}",
          f"{rec['table_upload_s'] * 1e6:.1f}"]
         for name, rec in records.items()
     ]
     text = common.fmt_table(
-        ["backend", "resolved", "dispatch us", "full us", "row ns",
-         "upload us"], rows
+        ["backend", "resolved", "dispatch us", "full us", "beam us",
+         "row ns", "upload us"], rows
     )
 
     # sanity: the ordering argument of the paper — a kernel-launch dispatch
@@ -160,6 +194,9 @@ def run(quick: bool = True, backends: list[str] | None = None) -> dict:
         ),
         "full_dispatch_positive": all(
             r["full_dispatch_s"] > 0 for r in records.values()
+        ),
+        "beam_step_positive": all(
+            r["beam_step_s"] > 0 for r in records.values()
         ),
     }
     if "pallas" in records and records["pallas"]["backend"] == "pallas":

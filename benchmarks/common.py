@@ -6,6 +6,7 @@ from __future__ import annotations
 import os
 import pickle
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -68,6 +69,35 @@ def set_calibration(path: str) -> None:
     baselines_mod.set_default_calibration(baselines_mod.load_calibration(path))
 
 
+def set_device_beam(on: bool) -> None:
+    """Enable the fused on-device beam step for every system the benchmarks
+    build (threads run.py's --device-beam flag through SystemConfig)."""
+    baselines_mod.set_default_device_beam(on)
+
+
+def device_beam_active() -> bool:
+    """The device-beam setting systems will actually get, for results.json."""
+    return baselines_mod.default_device_beam()
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pin the JAX platform (and its XLA tuning flags) BEFORE any kernel
+    traces — only takes effect at the beginning of the program.  No-op when
+    jax is absent (the host backends need no platform pin)."""
+    try:
+        import jax
+    except ImportError:
+        return
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        # https://jax.readthedocs.io/en/latest/gpu_performance_tips.html
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_gpu_triton_gemm_any=True"
+            + " --xla_gpu_enable_latency_hiding_scheduler=true"
+        ).strip()
+
+
 _PALLAS_MODE_CACHE: dict[str, bool] = {}
 
 
@@ -84,6 +114,48 @@ def pallas_mode() -> bool | None:
             distance_mod.get_engine("pallas").interpret
         )
     return _PALLAS_MODE_CACHE["interpret"]
+
+
+def best_of(fn, reps: int = 5) -> float:
+    """Min wall-clock of ``fn()`` over ``reps`` runs (micro-timing floor)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def compiled_vs_interpret(make_fn, reps: int = 5,
+                          mode: bool | None = None) -> dict:
+    """Time one device operation in compiled and pallas-interpret modes.
+
+    ``make_fn(interpret: bool)`` returns a zero-arg callable executing ONE
+    invocation (it must block on the result); the harness warms each mode
+    before timing so trace/compile time never lands in the measurement.
+    ``compiled_s`` times the engine's NATIVE mode — ``pallas_interpret``
+    records which mode that actually was, so results.json from a CPU
+    interpret-mode run is distinguishable from a real accelerator run.
+    ``interpret_s`` is measured only when the engine compiled for real (an
+    interpret-mode process has no faster mode to compare against — and
+    force-compiling its kernels would fail, which is why it interprets).
+    ``mode`` overrides the native-mode probe: pass the timed engine's own
+    ``interpret`` flag when it isn't the session default backend (the
+    module-level ``pallas_mode()`` reflects the DEFAULT engine only)."""
+    if mode is None:
+        mode = pallas_mode()
+    fn = make_fn(bool(mode))  # the engine's NATIVE interpret flag
+    fn()  # warm: compile outside the timed region
+    rec = {
+        "compiled_s": best_of(fn, reps),
+        "interpret_s": None,
+        "pallas_interpret": mode,
+    }
+    if mode is False:
+        fi = make_fn(True)
+        fi()
+        rec["interpret_s"] = best_of(fi, reps)
+    return rec
 
 
 class Workload:

@@ -3,7 +3,7 @@
   python -m benchmarks.run [--quick | --full] [--only NAME] [--backend NAME]
                            [--fuse] [--fuse-rows N] [--shared-rendezvous]
                            [--overlap-flush] [--hbm-tier] [--hbm-slots N]
-                           [--calibration PATH] [--strict]
+                           [--device-beam] [--calibration PATH] [--strict]
 
 Writes benchmarks/out/results.json and prints each table with the paper
 claims it validates.  --strict exits non-zero when any module errors or any
@@ -44,6 +44,7 @@ MODULES = [
     "bench_fusion",          # cross-query fused dispatch: B x fuse-budget sweep
     "bench_multitenant",     # serving plane: shared pool vs partition under skew
     "bench_sharded",         # sharded scatter-gather: S=1 parity + QPS scaling
+    "bench_beam_step",       # fused on-device beam step: parity + exchange
 ]
 
 
@@ -74,6 +75,10 @@ def main():
     ap.add_argument("--hbm-slots", type=int, default=None,
                     help="HBM tier slot count (default: match the host "
                          "pool's slot count)")
+    ap.add_argument("--device-beam", action="store_true",
+                    help="fused on-device beam step (score + visited mask + "
+                         "top-k merge + frontier selection in one engine "
+                         "call) for every system")
     ap.add_argument("--calibration", default=None, metavar="PATH",
                     help="per-backend CostModel overrides from "
                          "benchmarks/calibrate.py (benchmarks/out/"
@@ -97,10 +102,13 @@ def main():
     if args.hbm_tier or args.hbm_slots is not None:
         common.set_hbm(args.hbm_tier or args.hbm_slots is not None,
                        args.hbm_slots)
+    if args.device_beam:
+        common.set_device_beam(True)
     if args.calibration:
         common.set_calibration(args.calibration)
     print(f"distance backend: {common.active_backend()}  fuse: {common.fuse_active()}"
-          f"  hbm: {common.hbm_active()}")
+          f"  hbm: {common.hbm_active()}"
+          f"  device_beam: {common.device_beam_active()}")
 
     os.makedirs(common.OUT_DIR, exist_ok=True)
     results = {}
@@ -122,6 +130,7 @@ def main():
         res["pallas_interpret"] = common.pallas_mode()
         res["fuse"] = common.fuse_active()
         res["hbm"] = common.hbm_active()
+        res["device_beam"] = common.device_beam_active()
         res["calibration"] = args.calibration
         results[modname] = res
         print(f"\n=== {res.get('name', modname)}  ({dt:.1f}s) ===")

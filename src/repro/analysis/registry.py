@@ -45,6 +45,11 @@ ENGINE_OPS: dict[str, OpSpec] = {
                "charge simulated CPU seconds to the worker"),
         OpSpec("score", 1, False, "np.ndarray",
                "a ScoreRequest; may park in the rendezvous buffer"),
+        OpSpec("beam", 1, False, "BeamResult",
+               "a BeamRequest executing one fused on-device beam step "
+               "(score + visited mask + top-k merge + frontier selection); "
+               "may park in the rendezvous buffer; the reply is the next "
+               "frontier, not raw distances"),
         OpSpec("scatter", 1, True, "np.ndarray",
                "a ShardScatter routing a ScoreRequest's rows to their "
                "owning engine shards; may park in per-shard rendezvous "

@@ -51,6 +51,7 @@ _DEFAULT_OVERLAP = False
 _DEFAULT_CALIBRATION: dict | None = None
 _DEFAULT_HBM = False
 _DEFAULT_HBM_SLOTS: int | None = None
+_DEFAULT_DEVICE_BEAM = False
 
 
 def set_default_fuse(
@@ -97,6 +98,20 @@ def set_default_hbm(on: bool, slots: int | None = None) -> None:
 
 def default_hbm() -> tuple[bool, int | None]:
     return _DEFAULT_HBM, _DEFAULT_HBM_SLOTS
+
+
+def set_default_device_beam(on: bool) -> None:
+    """Process-wide default for the fused on-device beam step — the hook
+    ``benchmarks/run.py --device-beam`` threads through.  When on, search
+    coroutines keep their beam state engine-resident and yield one
+    ``("beam", ...)`` op per hop instead of downloading raw distances
+    (core.beam, docs/beam_step.md)."""
+    global _DEFAULT_DEVICE_BEAM
+    _DEFAULT_DEVICE_BEAM = bool(on)
+
+
+def default_device_beam() -> bool:
+    return _DEFAULT_DEVICE_BEAM
 
 
 def set_default_calibration(calib: dict | None) -> None:
@@ -172,6 +187,13 @@ class SystemConfig:
     hbm_slots: int | None = None  # HBM tier slot count (None -> process
                                   # default, which falls back to the host
                                   # pool's slot count)
+    device_beam: bool | None = None  # fused on-device beam step: one
+                                  # ("beam", ...) op per hop — score +
+                                  # visited mask + top-k merge + frontier
+                                  # selection in a single engine call, reply
+                                  # is the FRONTIER (None -> process
+                                  # default; off = the host-beam bitwise
+                                  # reference path)
     n_shards: int | None = None   # sharded scatter-gather serving plane
                                   # (core.sharding): split the index image
                                   # across this many engine shards, each with
@@ -323,6 +345,10 @@ def build_system(
         ),
         hbm_slots=(
             default_hbm()[1] if config.hbm_slots is None else config.hbm_slots
+        ),
+        device_beam=(
+            default_device_beam()
+            if config.device_beam is None else config.device_beam
         ),
     )
     cost = cost or CostModel()
@@ -476,6 +502,7 @@ def build_system(
         dist=dist_engine,
         resident_ids=config.resident_plane,
         shard_plan=shard_plan,
+        device_beam=bool(config.device_beam),
     )
     return System(
         name=name,
@@ -547,6 +574,13 @@ def evaluate(
         "scatter_ops": stats.scatter_ops,
         "shard_flushes": stats.shard_flushes,
         "shard_merges": stats.shard_merges,
+        "device_beam": bool(system.config.device_beam),
+        "beam_ops": stats.beam_ops,
+        "beam_flushes": stats.beam_flushes,
+        "beam_rows": stats.beam_rows,
+        "beam_steps": dist1.beam_steps - dist0.beam_steps,
+        "dist_downloads": stats.dist_downloads,
+        "downloads_per_query": stats.downloads_per_query,
         "hbm_tier": system.hbm is not None,
         "hbm_hits": stats.hbm_hits,
         "hbm_misses": stats.hbm_misses,

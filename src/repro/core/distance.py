@@ -51,6 +51,7 @@ import warnings
 
 import numpy as np
 
+from repro.core import beam as beam_mod
 from repro.core.quant import (
     PreparedQuery,
     QuantizedBase,
@@ -112,6 +113,11 @@ class DistanceStats:
     # HBM record-cache tier: rows refined by slot-indirection gathers from
     # device cache slots (zero per-hop upload, like the resident table path)
     slot_gathers: int = 0
+    # fused on-device beam steps: score + visited mask + top-k merge +
+    # frontier select executed engine-side (the reply is a frontier, not a
+    # per-row distance download)
+    beam_steps: int = 0
+    beam_rows: int = 0
 
     def dispatches(self) -> int:
         """Total kernel/ufunc dispatches issued by this engine instance."""
@@ -445,6 +451,145 @@ class DistanceEngine:
             off += m
         return outs
 
+    # ---- fused beam step: score -> visited mask -> top-k -> frontier -------
+    # The reply to a beam op is the next FRONTIER, not a distance download:
+    # the per-query candidate heap and visited/explored masks stay engine-
+    # resident across hops (device arrays on the pallas backend).  Scoring
+    # routes through the same estimate/full machinery as the host path, so
+    # distances are bitwise identical to a ("score", ...) op; the merge and
+    # frontier selection follow the (d, v)-tuple order of the host _Beam.
+
+    def beam_new(self, L: int, n: int) -> beam_mod.BeamState:
+        """Fresh engine-resident beam state for one query (L-slot candidate
+        heap over an n-vertex id space)."""
+        return beam_mod.BeamState.new(L, n)
+
+    def beam_step(self, qb, req: beam_mod.BeamRequest) -> beam_mod.BeamResult:
+        """One fused beam step (see ``beam_step_many``)."""
+        return self.beam_step_many(qb, [req])[0]
+
+    def beam_step_many(
+        self, qb, reqs: list[beam_mod.BeamRequest]
+    ) -> list[beam_mod.BeamResult]:
+        """Fused beam steps for a rendezvous group of queries: score each
+        request's fresh ids, drop visited, merge into its candidate heap,
+        mark explored, and select its next frontier — one launch for the
+        whole group on the device backend."""
+        self.stats.beam_steps += len(reqs)
+        self.stats.beam_rows += sum(int(r.rows) for r in reqs)
+        return self._beam_step_many(qb, reqs)
+
+    def _beam_step_many(self, qb, reqs):
+        scores = self._beam_scores(qb, reqs)
+        return [self._beam_apply(r, s) for r, s in zip(reqs, scores)]
+
+    def _beam_scores(self, qb, reqs) -> list[np.ndarray]:
+        """Fresh-id distances per request, via the engine's own fused score
+        paths (bitwise the values a ("score", ...) op would have returned)."""
+        scores: list = [None] * len(reqs)
+
+        def ids_of(r):  # BeamRequest carries .fresh, BeamShardPart .ids
+            return r.fresh if isinstance(r, beam_mod.BeamRequest) else r.ids
+
+        subgroups: dict[tuple, list[int]] = {}
+        for i, r in enumerate(reqs):
+            gqb = r.qb if r.qb is not None else qb
+            subgroups.setdefault((r.kind, id(gqb)), []).append(i)
+        for (kind, _), idxs in subgroups.items():
+            if kind == "estimate":
+                gqb = reqs[idxs[0]].qb if reqs[idxs[0]].qb is not None else qb
+                res = self.estimate_many(gqb, [
+                    (reqs[i].pq,
+                     np.asarray(ids_of(reqs[i]), np.int64) + reqs[i].vid_base)
+                    for i in idxs
+                ])
+            elif kind == "full":
+                res = self.refine_full_many([
+                    (reqs[i].query, reqs[i].vectors) for i in idxs
+                ])
+            else:
+                raise ValueError(f"unknown beam request kind {kind!r}")
+            for i, s in zip(idxs, res):
+                scores[i] = s
+        return scores
+
+    def _beam_apply(
+        self, req: beam_mod.BeamRequest, fresh_d: np.ndarray
+    ) -> beam_mod.BeamResult:
+        """Reference (vectorized NumPy) mask/merge/select over one state."""
+        st = req.state
+        cand_d, cand_v, visited, explored = self._beam_host_view(st)
+        cv = np.concatenate([
+            np.asarray(req.fresh, np.int64),
+            np.asarray(req.insert_ids, np.int64),
+        ])
+        cd = np.concatenate([
+            np.asarray(fresh_d, np.float32),
+            np.asarray(req.insert_ds, np.float32),
+        ])
+        # first-wins within the step, then the visited bitmask — the host
+        # _Beam.insert early-return semantics
+        keep = beam_mod.dedupe_first(cv) & ~beam_mod.mask_ids(visited, cv)
+        cv, cd = cv[keep], cd[keep]
+        beam_mod.set_ids(visited, cv)
+        cand_d, cand_v = beam_mod.merge_topk(cand_d, cand_v, cd, cv, st.L)
+        expl = np.asarray(req.explored, np.int64)
+        if expl.size:
+            beam_mod.set_ids(explored, expl)
+        self._beam_store(st, cand_d, cand_v, visited, explored)
+        frontier, wlen, tail = beam_mod.select_frontier(cand_d, cand_v, explored)
+        res = beam_mod.BeamResult(frontier=frontier, window_len=wlen, tail=tail)
+        if req.topk:
+            k = min(int(req.topk), st.L)
+            real = cand_v[:k] != beam_mod.PAD_VID
+            res.topk_ids = cand_v[:k][real]
+            res.topk_ds = cand_d[:k][real]
+        return res
+
+    def _beam_host_view(self, st: beam_mod.BeamState):
+        return st.cand_d, st.cand_v, st.visited, st.explored
+
+    def _beam_store(self, st, cand_d, cand_v, visited, explored):
+        st.cand_d, st.cand_v = cand_d, cand_v
+        st.visited, st.explored = visited, explored
+
+    # ---- sharded beam: local top-k per shard, global merge at the join -----
+
+    def beam_score_local(self, qb, part: beam_mod.BeamShardPart):
+        return self.beam_score_local_many(qb, [part])[0]
+
+    def beam_score_local_many(
+        self, qb, parts: list[beam_mod.BeamShardPart]
+    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Score each shard part's LOCAL ids and return its local top-L
+        (ids, dists) — the ``dist_search`` mask-local-topk idiom: ranking
+        happens on local ids (mask BEFORE translation); ``vid_base`` is
+        applied only for the table gather.  The engine merges the per-shard
+        slices at the scatter join (``beam_finalize``); the union of local
+        top-Ls contains the global top-L, so the result is bitwise the
+        single-shard step."""
+        scores = self._beam_scores(qb, parts)
+        outs = []
+        for p, ds in zip(parts, scores):
+            ids = np.asarray(p.ids, np.int64)
+            ds = np.asarray(ds, np.float32)
+            order = np.lexsort((ids, ds))[: p.L]
+            outs.append((ids[order], ds[order]))
+        return outs
+
+    def beam_finalize(
+        self, qb, req: beam_mod.BeamRequest,
+        ids: np.ndarray, ds: np.ndarray,
+    ) -> beam_mod.BeamResult:
+        """Fold the globally merged candidates of a multi-shard beam scatter
+        into the request's state (no scoring — the shards already did it) and
+        select the frontier, applying the request's pending inserts and
+        explored marks exactly once."""
+        self.stats.beam_steps += 1
+        self.stats.beam_rows += int(np.asarray(ids).size)
+        sub = dataclasses.replace(req, fresh=np.asarray(ids, np.int64))
+        return self._beam_apply(sub, np.asarray(ds, np.float32))
+
     # ---- id-based hooks over registered tables -----------------------------
     # Defaults gather the rows from the registered host view and delegate to
     # the matrix hooks — bitwise identical to a caller-side gather.  The
@@ -551,6 +696,49 @@ class ScalarEngine(DistanceEngine):
             out[i] = diff @ diff
         return out
 
+    def _beam_apply(self, req, fresh_d):
+        # Literal insort oracle, independently implemented from the
+        # vectorized merge — the property-test reference, written the way
+        # the host _Beam maintains its list.
+        import bisect
+
+        st = req.state
+        _, _, visited, explored = self._beam_host_view(st)
+        items = [
+            (float(d), int(v))
+            for d, v in zip(st.cand_d, st.cand_v)
+            if v != beam_mod.PAD_VID
+        ]
+        pairs = list(zip(np.asarray(req.fresh, np.int64),
+                         np.asarray(fresh_d, np.float32)))
+        pairs += list(zip(np.asarray(req.insert_ids, np.int64),
+                          np.asarray(req.insert_ds, np.float32)))
+        for v, d in pairs:
+            v = int(v)
+            if visited[v]:
+                continue
+            visited[v] = True
+            bisect.insort(items, (float(np.float32(d)), v))
+        items = items[: st.L]
+        cand_d = np.full(st.L, beam_mod.INF, dtype=np.float32)
+        cand_v = np.full(st.L, beam_mod.PAD_VID, dtype=np.int64)
+        for i, (d, v) in enumerate(items):
+            cand_d[i], cand_v[i] = d, v
+        for v in np.asarray(req.explored, np.int64):
+            explored[int(v)] = True
+        self._beam_store(st, cand_d, cand_v, visited, explored)
+        frontier = np.asarray(
+            [v for _, v in items if not explored[v]], dtype=np.int64
+        )
+        res = beam_mod.BeamResult(
+            frontier=frontier, window_len=len(items), tail=float(cand_d[-1])
+        )
+        if req.topk:
+            head = items[: min(int(req.topk), st.L)]
+            res.topk_ids = np.asarray([v for _, v in head], dtype=np.int64)
+            res.topk_ds = np.asarray([d for d, _ in head], dtype=np.float32)
+        return res
+
 
 class BatchEngine(DistanceEngine):
     """Vectorized NumPy over whole code matrices (default backend)."""
@@ -632,6 +820,99 @@ def _pallas_resident_fns():
 
         _PALLAS_RESIDENT_FNS = (gather_estimate, gather_refine)
     return _PALLAS_RESIDENT_FNS
+
+
+# The fused beam step: score -> visited mask -> top-k merge -> frontier
+# selection as ONE jitted call over device-resident state.  Module-level
+# cache for the same reason as ``_pallas_resident_fns``: one jit cache per
+# process, retraced only per static shape bucket (B, Fp, Ip, Ep, L, n).
+_PALLAS_BEAM_FN = None
+
+
+def _pallas_beam_fn():
+    global _PALLAS_BEAM_FN
+    if _PALLAS_BEAM_FN is None:
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.binary_ip import estimate_dist2 as _binary_est
+
+        @functools.partial(jax.jit, static_argnames=("bucket", "interpret"))
+        def beam_step(Q, codes, norms, ip_bar, ids, vid_base, fresh_len,
+                      ins_v, ins_d, ins_len, expl, cand_d, cand_v, visited,
+                      explored, bucket, interpret):
+            B, Fp = ids.shape
+            L = cand_d.shape[1]
+            sink = visited.shape[1] - 1  # pad-lane write target (slot n)
+            PAD = jnp.int32(2**31 - 1)
+            INF = jnp.float32(jnp.inf)
+            rows_b = jnp.arange(B)[:, None]
+
+            # -- score: gather codes by id where the table lives, one kernel
+            # launch for every query's fresh rows (pad lanes gather row 0 and
+            # are masked below, exactly like _pad_ids)
+            flat = (ids + vid_base[:, None]).reshape(-1)
+            pad_rows = -flat.shape[0] % bucket
+            if pad_rows:
+                flat = jnp.concatenate(
+                    [flat, jnp.zeros(pad_rows, dtype=flat.dtype)]
+                )
+            est = _binary_est(
+                Q, codes[flat], norms[flat], ip_bar[flat], interpret=interpret
+            )  # (B, Mp)
+            owner = jnp.repeat(jnp.arange(B), Fp)
+            d_fresh = est[owner, jnp.arange(B * Fp)].reshape(B, Fp)
+
+            # -- visited-bitmask filter + first-wins dedupe over the step's
+            # candidates (fresh rows first, then host-provided inserts)
+            lane_f = jnp.arange(Fp)[None, :]
+            ok_f = lane_f < fresh_len[:, None]
+            lane_i = jnp.arange(ins_v.shape[1])[None, :]
+            ok_i = lane_i < ins_len[:, None]
+            cv = jnp.concatenate([ids, ins_v], axis=1)
+            cd = jnp.concatenate([d_fresh, ins_d], axis=1)
+            ok = jnp.concatenate([ok_f, ok_i], axis=1)
+            ok = ok & ~jnp.take_along_axis(
+                visited, jnp.minimum(cv, sink), axis=1
+            )
+            masked_v = jnp.where(ok, cv, PAD)
+            perm = jnp.argsort(masked_v, axis=1)  # stable: lane order on ties
+            sv = jnp.take_along_axis(masked_v, perm, axis=1)
+            dup_sorted = jnp.concatenate(
+                [jnp.zeros((B, 1), bool), sv[:, 1:] == sv[:, :-1]], axis=1
+            )
+            dup = jnp.zeros_like(dup_sorted).at[rows_b, perm].set(dup_sorted)
+            ok = ok & ~dup
+
+            # -- visited update (invalid lanes write the pad sink)
+            visited = visited.at[rows_b, jnp.where(ok, cv, sink)].set(True)
+
+            # -- top-k merge against the resident candidate heap: sort by the
+            # (distance, vertex id) tuple — np.lexsort((v, d)) lane for lane
+            md = jnp.concatenate([cand_d, jnp.where(ok, cd, INF)], axis=1)
+            mv = jnp.concatenate([cand_v, jnp.where(ok, cv, PAD)], axis=1)
+            sd, svv = jax.lax.sort((md, mv), num_keys=2, is_stable=True)
+            cand_d, cand_v = sd[:, :L], svv[:, :L]
+
+            # -- explored marks, then frontier = unexplored heap entries in
+            # heap (ascending) order, stable-compacted to the front
+            explored = explored.at[rows_b, expl].set(True)
+            real = cand_v != PAD
+            live = real & ~jnp.take_along_axis(
+                explored, jnp.minimum(cand_v, sink), axis=1
+            )
+            rank = jnp.where(live, jnp.int32(0), jnp.int32(1))
+            lanes = jnp.tile(jnp.arange(L, dtype=jnp.int32)[None, :], (B, 1))
+            r_s, _, fv = jax.lax.sort((rank, lanes, cand_v), num_keys=2)
+            frontier = jnp.where(r_s == 0, fv, jnp.int32(-1))
+            window_len = real.sum(axis=1).astype(jnp.int32)
+            tail = cand_d[:, L - 1]
+            return cand_d, cand_v, visited, explored, frontier, window_len, tail
+
+        _PALLAS_BEAM_FN = beam_step
+    return _PALLAS_BEAM_FN
 
 
 class _DeviceTable:
@@ -807,6 +1088,124 @@ class PallasEngine(BatchEngine):
         owner = np.repeat(np.arange(len(pqs)), sizes)
         return out[owner, np.arange(m)].astype(np.float32, copy=False)
 
+    # ---- fused beam step: the single-jitted-call device path ---------------
+    # The candidate heap and visited/explored masks live as device arrays
+    # across hops; one jit executes score -> mask -> merge -> select, and the
+    # only download per step is the frontier (plus two scalars).  The fp32
+    # "full" kind and the non-resident mode take the generic NumPy path via
+    # the host-view round-trip, consistent with the engine's existing policy
+    # for paths without a kernel.
+
+    def beam_new(self, L, n):
+        st = beam_mod.BeamState.new(L, n)
+        if self.resident:
+            jnp = self._jnp
+            st.cand_d = jnp.asarray(st.cand_d)
+            st.cand_v = jnp.asarray(st.cand_v.astype(np.int32))
+            st.visited = jnp.asarray(st.visited)
+            st.explored = jnp.asarray(st.explored)
+            st.backend = "device"
+        return st
+
+    def _beam_host_view(self, st):
+        if st.backend != "device":
+            return super()._beam_host_view(st)
+        return (
+            np.asarray(st.cand_d),
+            np.asarray(st.cand_v, dtype=np.int64),
+            # masks are mutated in place by the generic path; device->host
+            # views are read-only, so materialize writable copies
+            np.array(st.visited),
+            np.array(st.explored),
+        )
+
+    def _beam_store(self, st, cand_d, cand_v, visited, explored):
+        if st.backend != "device":
+            return super()._beam_store(st, cand_d, cand_v, visited, explored)
+        jnp = self._jnp
+        st.cand_d = jnp.asarray(np.asarray(cand_d, dtype=np.float32))
+        st.cand_v = jnp.asarray(np.asarray(cand_v).astype(np.int32))
+        st.visited = jnp.asarray(np.asarray(visited))
+        st.explored = jnp.asarray(np.asarray(explored))
+
+    def _beam_step_many(self, qb, reqs):
+        gqb = reqs[0].qb if reqs[0].qb is not None else qb
+        fusable = (
+            self.resident
+            and all(r.kind == "estimate" for r in reqs)
+            and all((r.qb if r.qb is not None else qb) is gqb for r in reqs)
+            and all(int(r.topk) == 0 for r in reqs)
+            and all(r.state.backend == "device" for r in reqs)
+            and len({(r.state.L, r.state.n) for r in reqs}) == 1
+        )
+        if not fusable:
+            return super()._beam_step_many(qb, reqs)
+        jnp = self._jnp
+        tbl = self.register_index(gqb)
+        B = len(reqs)
+        n = reqs[0].state.n
+
+        def pad8(m: int) -> int:
+            return max(8, ((m + 7) // 8) * 8)
+
+        fresh = [np.asarray(r.fresh, dtype=np.int64) for r in reqs]
+        insv_l = [np.asarray(r.insert_ids, dtype=np.int64) for r in reqs]
+        expl_l = [np.asarray(r.explored, dtype=np.int64) for r in reqs]
+        Fp = pad8(max(f.size for f in fresh))
+        Ip = pad8(max(v.size for v in insv_l))
+        Ep = pad8(max(e.size for e in expl_l))
+        ids = np.zeros((B, Fp), dtype=np.int32)
+        flen = np.zeros(B, dtype=np.int32)
+        insv = np.zeros((B, Ip), dtype=np.int32)
+        insd = np.full((B, Ip), np.inf, dtype=np.float32)
+        ilen = np.zeros(B, dtype=np.int32)
+        expl = np.full((B, Ep), n, dtype=np.int32)  # pad lanes hit the sink
+        vbase = np.zeros(B, dtype=np.int32)
+        for i, r in enumerate(reqs):
+            ids[i, : fresh[i].size] = fresh[i]
+            flen[i] = fresh[i].size
+            insv[i, : insv_l[i].size] = insv_l[i]
+            insd[i, : insv_l[i].size] = np.asarray(r.insert_ds, np.float32)
+            ilen[i] = insv_l[i].size
+            expl[i, : expl_l[i].size] = expl_l[i]
+            vbase[i] = int(r.vid_base)
+        Q = np.stack([r.pq.qr for r in reqs]).astype(np.float32, copy=False)
+        cand_d = jnp.stack([r.state.cand_d for r in reqs])
+        cand_v = jnp.stack([r.state.cand_v for r in reqs])
+        visited = jnp.stack([r.state.visited for r in reqs])
+        explored = jnp.stack([r.state.explored for r in reqs])
+        rows = int(flen.sum())
+        if rows:  # merge-only steps (insert/mark flushes) score nothing
+            self.stats.level1_calls += 1
+            self.stats.level1_rows += rows
+            self.stats.resident_gathers += rows
+            if B > 1:
+                self.stats.fused_calls += 1
+                self.stats.fused_queries += B
+        fn = _pallas_beam_fn()
+        (cand_d, cand_v, visited, explored, frontier, wlen, tail) = fn(
+            Q, tbl.binary_codes, tbl.norms, tbl.ip_bar, ids, vbase, flen,
+            insv, insd, ilen, expl, cand_d, cand_v, visited, explored,
+            bucket=self.bucket, interpret=self.interpret,
+        )
+        # the ONE host<->device exchange per step: frontiers + two scalars
+        frontier_np = np.asarray(frontier)
+        wlen_np = np.asarray(wlen)
+        tail_np = np.asarray(tail)
+        out = []
+        for i, r in enumerate(reqs):
+            r.state.cand_d = cand_d[i]
+            r.state.cand_v = cand_v[i]
+            r.state.visited = visited[i]
+            r.state.explored = explored[i]
+            fr = frontier_np[i]
+            out.append(beam_mod.BeamResult(
+                frontier=fr[fr >= 0].astype(np.int64),
+                window_len=int(wlen_np[i]),
+                tail=float(tail_np[i]),
+            ))
+        return out
+
     # ---- matrix paths: caller-gathered rows, re-uploaded per call ----------
 
     def _estimate(self, qb, pq, codes, norms, ip_bar):
@@ -891,6 +1290,12 @@ def request_group_key(req: ScoreRequest, default_qb: QuantizedBase | None):
     concatenates mismatched matrices.  Single-system runs have one table and
     one dim, so the grouping degenerates to the per-kind PR-2 rule, bitwise.
     """
+    if isinstance(req, beam_mod.BeamRequest):
+        qb = req.qb if req.qb is not None else default_qb
+        return ("beam", (req.kind, id(qb)))
+    if isinstance(req, beam_mod.BeamShardPart):
+        qb = req.qb if req.qb is not None else default_qb
+        return ("beam_part", (req.kind, id(qb)))
     kind = req.kind
     if kind == "refine" and isinstance(req.payload, tuple):
         kind = "refine_rows"  # materialized host-gather wire format
@@ -932,13 +1337,20 @@ def execute_requests(
         groups.setdefault(request_group_key(r, qb), []).append(i)
     for (kind, _), idxs in groups.items():
         gqb = reqs[idxs[0]].qb if reqs[idxs[0]].qb is not None else qb
-        if gqb is None and kind != "full":
+        needs_qb = kind in ("estimate", "refine", "refine_rows") or (
+            kind in ("beam", "beam_part") and reqs[idxs[0]].kind == "estimate"
+        )
+        if gqb is None and needs_qb:
             raise ValueError(
                 "score requests of kind 'estimate'/'refine' need a "
                 "QuantizedBase: set ScoreRequest.qb or pass qb= to the "
                 "Engine / run_workload executing these coroutines"
             )
-        if kind == "estimate":
+        if kind == "beam":
+            res = engine.beam_step_many(gqb, [reqs[i] for i in idxs])
+        elif kind == "beam_part":
+            res = engine.beam_score_local_many(gqb, [reqs[i] for i in idxs])
+        elif kind == "estimate":
             res = engine.estimate_many(
                 gqb, [(reqs[i].pq, reqs[i].payload) for i in idxs]
             )

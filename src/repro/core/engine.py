@@ -90,6 +90,21 @@ does, every flush charge lands at the same time on the same clock, and the
 sharded engine is bitwise identical to the unsharded one (the S=1 parity
 contract; tests/test_sharding.py, benchmarks/bench_sharded.py).  Resident
 code tables upload once per (shard, table): each shard pins its own copy.
+
+Fused on-device beam steps (``SearchContext.device_beam``, core.beam):
+coroutines yield ``("beam", BeamRequest)`` ops — score + visited-mask +
+top-k merge + frontier selection execute as ONE fused DistanceEngine call
+(``beam_step_many``) whose reply is the next FRONTIER, not raw distances.
+Beam ops park in the same rendezvous buffers as score ops (per-worker,
+shared, or per-shard) and flush under the same rules; each fused beam group
+charges ``CostModel.beam_step_s`` once per flush via the ``fused_batch_s``
+kind plumbing.  On the sharded plane a multi-shard beam scatter sends each
+owning shard a ``BeamShardPart`` (score locally, return the local top-L);
+the join merges the slices (``ScatterJoin.merge_beam_candidates``) and the
+engine folds them into the resident state exactly once via
+``DistanceEngine.beam_finalize``.  ``WorkloadStats.dist_downloads`` counts
+the replies that still ship raw distances — beam replies do not, which is
+the whole point: downloads/query drops from ~hops x kinds to ~hops.
 """
 
 from __future__ import annotations
@@ -101,6 +116,7 @@ from collections.abc import Callable
 
 import numpy as np
 
+from repro.core import beam as beam_mod
 from repro.core import distance as distance_mod
 from repro.core.sim import SSD, CostModel, WorkloadStats
 
@@ -403,6 +419,19 @@ class Engine:
             stats.score_flushes += len(flop_by_group)
             stats.score_requests += len(reqs)
             stats.score_rows += sum(r.rows for r in reqs)
+            n_beam = sum(
+                1 for r in reqs if isinstance(r, beam_mod.BeamRequest)
+            )
+            stats.beam_ops += n_beam
+            stats.beam_rows += sum(
+                r.rows for r in reqs if isinstance(r, beam_mod.BeamRequest)
+            )
+            stats.beam_flushes += sum(
+                1 for key in flop_by_group if key[0].startswith("beam")
+            )
+            # beam replies ship a frontier, not distances — everything else
+            # in the flush still downloads its raw per-row result
+            stats.dist_downloads += len(reqs) - n_beam
             # cross-tenant FUSION means one dispatch group genuinely spanned
             # tenants — a flush whose per-tenant requests were routed to
             # separate per-table calls does not count
@@ -458,6 +487,20 @@ class Engine:
                 else:
                     push_event(initiator.t, "resume", (wkr, gen, val, qid))
 
+        def finish_beam_join(join) -> object:
+            """Resolve a completed beam join into its BeamResult: the
+            single-owner passthrough already executed the ORIGINAL request
+            (the S=1 parity lever — bitwise the unsharded beam step);
+            multi-shard joins merge the per-shard local top-Ls and fold them
+            into the resident state exactly once (pending inserts/marks
+            applied at the finalize, never per part)."""
+            if join.direct is not None:
+                return join.direct
+            req = join.beam_req
+            ids, ds = join.merge_beam_candidates()
+            rqb = req.qb if req.qb is not None else self.qb
+            return self.dist.beam_finalize(rqb, req, ids, ds)
+
         def flush_sharded(initiator: _Worker, only=None) -> None:
             """Flush the per-shard rendezvous buffers — all of them at a
             stall, or the budget-crossing subset ``only``.  Each shard's
@@ -495,6 +538,9 @@ class Engine:
                 stats.score_flushes += len(flop_by_group)
                 stats.score_requests += len(reqs)
                 stats.score_rows += sum(r.rows for r in reqs)
+                stats.beam_flushes += sum(
+                    1 for key in flop_by_group if key[0].startswith("beam")
+                )
                 stats.shard_flushes += 1
                 if any(len(ts) > 1 for ts in tenants_by_group.values()):
                     stats.cross_tenant_flushes += 1
@@ -509,7 +555,13 @@ class Engine:
                 if join.n_parts > 1:
                     t_done += self.cost.shard_merge_s
                     stats.shard_merges += 1
-                merged = join.merge()
+                if join.beam_req is not None:
+                    merged = finish_beam_join(join)
+                    stats.beam_ops += 1
+                    stats.beam_rows += join.beam_req.rows
+                else:
+                    merged = join.merge()
+                    stats.dist_downloads += 1
                 if join.worker is initiator:
                     initiator.t = max(initiator.t, t_done)
                     initiator.ready.append(
@@ -610,21 +662,51 @@ class Engine:
                         value = distance_mod.execute_requests(
                             self.dist, self.qb, [req]
                         )[0]
+                    stats.dist_downloads += 1
                     if verify is not None:
                         # the per-query dispatch is the degenerate flush
                         # boundary (fusion off): same invariant cadence
+                        verify.at_flush()
+                elif kind == "beam":
+                    req = op[1]
+                    if shared:
+                        shared_pending.append((w, gen, qid, req))
+                        shared_rows += req.rows
+                        if shared_rows >= cfg.fuse_rows:
+                            flush_shared(w)
+                        return  # parked in the system-wide rendezvous
+                    if cfg.fuse:
+                        w.pending.append((gen, qid, req))
+                        w.pending_rows += req.rows
+                        if w.pending_rows >= cfg.fuse_rows:
+                            flush_scores(w)
+                        return  # parked in the rendezvous buffer
+                    # fusion off: one fused beam launch for this query alone
+                    # (still a single exchange — the reply is the frontier)
+                    charge_upload(w, (req,))
+                    key = distance_mod.request_group_key(req, self.qb)
+                    w.t += self.cost.fused_batch_s(req.flop_s, kind=key[0])
+                    value = distance_mod.execute_requests(
+                        self.dist, self.qb, [req]
+                    )[0]
+                    stats.beam_ops += 1
+                    stats.beam_flushes += 1
+                    stats.beam_rows += req.rows
+                    if verify is not None:
                         verify.at_flush()
                 elif kind == "scatter":
                     sc = op[1]
                     parts = router.split(sc)
                     stats.scatter_ops += 1
+                    is_beam = isinstance(sc.req, beam_mod.BeamRequest)
                     if cfg.fuse:
                         # park each slice in its owning shard's rendezvous
                         # buffer; flush every shard this scatter pushed over
                         # the row budget (with one shard: exactly the shared
                         # rendezvous budget rule)
                         join = router.make_join(
-                            w, gen, qid, sc.req.rows, len(parts)
+                            w, gen, qid, sc.req.rows, len(parts),
+                            beam_req=sc.req if is_beam else None,
                         )
                         crossed = []
                         for s, sub, ridx in parts:
@@ -638,6 +720,12 @@ class Engine:
                     # fusion off: each slice dispatches inline on its owning
                     # shard's clock; the worker resumes at the last slice's
                     # completion plus the merge collective (multi-shard only)
+                    join = (
+                        router.make_join(
+                            w, gen, qid, sc.req.rows, len(parts),
+                            beam_req=sc.req,
+                        ) if is_beam else None
+                    )
                     t0 = w.t
                     comp = t0
                     merged = None
@@ -645,13 +733,21 @@ class Engine:
                     for s, sub, ridx in parts:
                         st = max(router.shard_t[s], t0)
                         st += upload_charge_s((sub,), shard=s)
-                        st += self.cost.fused_batch_s(sub.flop_s)
+                        if is_beam:
+                            gkey = distance_mod.request_group_key(sub, self.qb)
+                            st += self.cost.fused_batch_s(
+                                sub.flop_s, kind=gkey[0]
+                            )
+                        else:
+                            st += self.cost.fused_batch_s(sub.flop_s)
                         val = distance_mod.execute_requests(
                             self.dist, self.qb, [sub]
                         )[0]
                         router.shard_t[s] = st
                         comp = max(comp, st)
-                        if ridx is None:
+                        if join is not None:
+                            join.put(ridx, val, st)
+                        elif ridx is None:
                             merged = val
                         else:
                             if out_rows is None:
@@ -663,7 +759,14 @@ class Engine:
                         comp += self.cost.shard_merge_s
                         stats.shard_merges += 1
                     w.t = comp
-                    value = merged if merged is not None else out_rows
+                    if join is not None:
+                        value = finish_beam_join(join)
+                        stats.beam_ops += 1
+                        stats.beam_flushes += len(parts)
+                        stats.beam_rows += sc.req.rows
+                    else:
+                        value = merged if merged is not None else out_rows
+                        stats.dist_downloads += 1
                     if verify is not None:
                         # per-query sharded dispatch: the degenerate flush
                         # boundary, same cadence as the fuse-off score path

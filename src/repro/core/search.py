@@ -51,6 +51,7 @@ from bisect import insort
 
 import numpy as np
 
+from repro.core import beam as beam_mod
 from repro.core import distance as distance_mod
 from repro.core import sharding as sharding_mod
 from repro.core.quant import RabitQuantizer
@@ -97,6 +98,13 @@ class SearchContext:
     # shard that owns its record — the algorithm itself stays unchanged (the
     # default, None, keeps the single-engine ("score", ...) wire format)
     shard_plan: object | None = None
+    # fused on-device beam step (core.beam): level-1 frontier maintenance
+    # moves into ("beam", BeamRequest) ops whose reply is the next FRONTIER —
+    # candidate heap and visited masks stay engine-resident across hops.  The
+    # default (False) keeps the host _Beam path, which stays the bitwise
+    # reference; True matches it result-bitwise (ids/dists/hops) per
+    # tests/test_beam.py.
+    device_beam: bool = False
 
     def __post_init__(self):
         if self.dist is None:
@@ -527,11 +535,140 @@ def _score_into_beam(ctx: SearchContext, pq, beam: "_Beam", fresh: list[int]):
         beam.insert(u, float(e))
 
 
+# ------------------------------------------------------ device-resident beam
+
+
+def _dispatch_beam(ctx: SearchContext, req, vids):
+    """Yield one fused beam op through the active dispatch plane: the single
+    engine ("beam"), or — when ``ctx.shard_plan`` is set — the scatter plane,
+    each owning shard scoring its slice of the fresh frontier and the join
+    merging the local top-Ls before frontier selection.  ``vids`` are the
+    LOCAL fresh ids in row order (like ``_dispatch_score``)."""
+    if ctx.shard_plan is None:
+        out = yield ("beam", req)
+        return out
+    scatter = sharding_mod.ShardScatter(
+        req=req, shard_rows=ctx.shard_plan.shards_of(vids)
+    )
+    out = yield ("scatter", scatter)
+    return out
+
+
+class _DeviceBeam:
+    """Host-side mirror of one query's engine-resident beam state.
+
+    The heap and visited/explored masks live with the DistanceEngine
+    (``ctx.dist.beam_new``, device arrays on pallas); the coroutine keeps
+    only what it needs between hops without a download: the ``seen`` /
+    ``explored`` sets (cheap host bookkeeping, also used by
+    ``_fresh_union``), the last reply's frontier / window stats, and the
+    pending explored-marks and known-distance inserts that ride along with
+    the next ``("beam", ...)`` op.  ``step`` is the one generator that talks
+    to the engine — one op per hop, whose reply is the next frontier."""
+
+    def __init__(self, ctx: SearchContext, pq, L: int,
+                 kind: str = "estimate", query=None):
+        self.ctx = ctx
+        self.pq = pq
+        self.L = L
+        self.kind = kind
+        self.query = query
+        self.state = ctx.dist.beam_new(L, ctx.index.n)
+        self.seen: set[int] = set()
+        self.explored: set[int] = set()
+        self.window_len = 0
+        self.tail = float("inf")
+        self.topk: tuple[np.ndarray, np.ndarray] | None = None
+        self._frontier: list[int] = []
+        self._marks: list[int] = []
+        self._ins_v: list[int] = []
+        self._ins_d: list[float] = []
+
+    def insert(self, vid: int, dist: float) -> bool:
+        """Queue a known-distance insert for the next step (first-wins, the
+        host ``_Beam.insert`` early-return on seen ids)."""
+        if vid in self.seen:
+            return False
+        self.seen.add(vid)
+        self._ins_v.append(int(vid))
+        self._ins_d.append(float(dist))
+        return True
+
+    def mark(self, vid: int) -> None:
+        """Mark explored: applied to the cached frontier immediately, to the
+        device mask with the next step's op."""
+        self.explored.add(vid)
+        self._marks.append(int(vid))
+        try:
+            self._frontier.remove(vid)
+        except ValueError:
+            pass
+
+    def unexplored(self, limit: int | None = None) -> list[int]:
+        if limit is not None:
+            return self._frontier[:limit]
+        return list(self._frontier)
+
+    def pending(self) -> bool:
+        """True when queued inserts could change the window/frontier (marks
+        alone keep the cached frontier exact and can wait for the next op)."""
+        return bool(self._ins_v)
+
+    def step(self, fresh: list[int], topk: int = 0):
+        """One fused beam step: score ``fresh``, fold in pending inserts and
+        marks, merge, and refresh the cached frontier/window from the reply
+        — the ONE exchange of this hop."""
+        ctx = self.ctx
+        for u in fresh:
+            self.seen.add(int(u))
+        fresh_arr = np.asarray(fresh, dtype=np.int64)
+        if self.kind == "full":
+            vectors = ctx.base[fresh_arr]
+            flop_s = fresh_arr.size * ctx.cost.refine_full(ctx.base.shape[1])
+            qb = None
+            query = np.asarray(self.query, dtype=np.float32)
+        else:
+            vectors = None
+            flop_s = ctx.cost.estimate(int(fresh_arr.size), ctx.qb.dim)
+            qb = ctx.table_qb
+            query = None
+        req = beam_mod.BeamRequest(
+            kind=self.kind,
+            state=self.state,
+            fresh=fresh_arr,
+            explored=np.asarray(self._marks, dtype=np.int64),
+            insert_ids=np.asarray(self._ins_v, dtype=np.int64),
+            insert_ds=np.asarray(self._ins_d, dtype=np.float32),
+            rows=int(fresh_arr.size),
+            flop_s=flop_s,
+            pq=self.pq,
+            query=query,
+            vectors=vectors,
+            qb=qb,
+            tenant=ctx.tenant,
+            topk=int(topk),
+            vid_base=ctx.vid_base,
+        )
+        self._marks, self._ins_v, self._ins_d = [], [], []
+        res = yield from _dispatch_beam(ctx, req, [int(u) for u in fresh])
+        self._frontier = [int(u) for u in res.frontier]
+        self.window_len = int(res.window_len)
+        self.tail = float(res.tail)
+        if topk:
+            self.topk = (
+                np.asarray(res.topk_ids, dtype=np.int64),
+                np.asarray(res.topk_ds, dtype=np.float32),
+            )
+        return res
+
+
 # ----------------------------------------------------------- VeloANN (Alg. 2)
 
 
 def velo_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     """Cache-aware beam search with proactive prefetching (paper Alg. 2)."""
+    if ctx.device_beam:
+        return (yield from _velo_search_device(ctx, q, p))
     cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
     d = qb.dim
     yield ("compute", _query_prep_cost(cost, d))
@@ -590,12 +727,76 @@ def velo_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
 
 
+def _velo_search_device(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """Alg. 2 with the beam engine-resident: the pivot/prefetch policy and
+    the refine path are the host loop's, but level-1 frontier maintenance is
+    one ("beam", ...) op per hop whose reply is the next frontier — no
+    estimate download, and only ``beam_visit_s`` of host bookkeeping per
+    explored vertex (result-bitwise the host path; op schedule differs)."""
+    cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
+    d = qb.dim
+    yield ("compute", _query_prep_cost(cost, d))
+    pq = RabitQuantizer.prepare_query(qb, q)
+
+    bm = _DeviceBeam(ctx, pq, p.L)
+    yield from bm.step([ctx.medoid])  # seed: medoid scored inside the step
+
+    refined: dict[int, float] = {}
+    hops = 0
+    reads0 = acc.reads
+    prefetched: set[int] = set()
+
+    while True:
+        unexp = bm.unexplored(limit=p.W)
+        if not unexp:
+            break
+        v = unexp[0]
+
+        if p.cbs and not acc.resident(v):
+            pivot = None
+            for c in unexp:
+                if pivot is None and acc.resident(c):
+                    pivot = c
+                elif p.prefetch and c not in prefetched:
+                    op = acc.prefetch_op(c)
+                    if op is not None:
+                        prefetched.add(c)
+                        yield ("compute", cost.io_submit_s)
+                        yield op
+            if pivot is not None:
+                v = pivot
+        elif p.prefetch:
+            for c in unexp[1 : 1 + p.prefetch_depth]:
+                if c in prefetched:
+                    continue
+                op = acc.prefetch_op(c)
+                if op is not None:
+                    prefetched.add(c)
+                    yield ("compute", cost.io_submit_s)
+                    yield op
+
+        rec = yield from acc.get(v)
+        yield ("compute", cost.beam_visit_s)
+        refined[v] = float((yield from _refine_records(ctx, pq, [rec]))[0])
+        bm.mark(v)
+        hops += 1
+
+        fresh = _fresh_union(bm, [rec])
+        if fresh:
+            yield from bm.step(fresh)
+
+    ids, ds = _finish(refined, p.k)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
+
+
 # ------------------------------------------------- DiskANN-style beam search
 
 
 def diskann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     """Synchronous beam search [23]: at each step fetch the top-W unexplored
     candidates with one batched read (bottlenecked by the slowest read)."""
+    if ctx.device_beam:
+        return (yield from _diskann_search_device(ctx, q, p))
     cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
     d = qb.dim
     yield ("compute", _query_prep_cost(cost, d))
@@ -629,12 +830,49 @@ def diskann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
 
 
+def _diskann_search_device(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """DiskANN beam with engine-resident frontier selection: one beam op per
+    batch expansion instead of an estimate download per hop group."""
+    cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
+    d = qb.dim
+    yield ("compute", _query_prep_cost(cost, d))
+    pq = RabitQuantizer.prepare_query(qb, q)
+
+    bm = _DeviceBeam(ctx, pq, p.L)
+    yield from bm.step([ctx.medoid])
+
+    refined: dict[int, float] = {}
+    hops = 0
+    reads0 = acc.reads
+
+    while True:
+        batch = bm.unexplored(limit=max(1, p.W))
+        if not batch:
+            break
+        recs = yield from acc.get_many(batch)
+        rec_list = [recs[v] for v in batch]
+        yield ("compute", len(batch) * cost.beam_visit_s)
+        dists = yield from _refine_records(ctx, pq, rec_list)
+        for v, dv in zip(batch, dists):
+            refined[v] = float(dv)
+            bm.mark(v)
+            hops += 1
+        fresh = _fresh_union(bm, rec_list)
+        if fresh:
+            yield from bm.step(fresh)
+
+    ids, ds = _finish(refined, p.k)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
+
+
 # ------------------------------------------------ Starling-style block search
 
 
 def starling_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     """DiskANN beam + block search: every fetched page's co-resident records
     are refined and expanded for free (exploits the shuffled layout)."""
+    if ctx.device_beam:
+        return (yield from _starling_search_device(ctx, q, p))
     cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
     index = ctx.index
     d = qb.dim
@@ -692,6 +930,63 @@ def starling_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
 
 
+def _starling_search_device(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """Block search with the beam engine-resident.  The sequential admission
+    filter needs the window AS OF each co-resident's turn, so every admitted
+    record's step ships immediately (pending insert forces it even when the
+    record expands no fresh neighbors) and the cached ``window_len``/``tail``
+    mirror the host's ``beam.window()`` check exactly."""
+    cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
+    index = ctx.index
+    d = qb.dim
+    yield ("compute", _query_prep_cost(cost, d))
+    pq = RabitQuantizer.prepare_query(qb, q)
+
+    bm = _DeviceBeam(ctx, pq, p.L)
+    yield from bm.step([ctx.medoid])
+
+    refined: dict[int, float] = {}
+    hops = 0
+    reads0 = acc.reads
+
+    while True:
+        batch = bm.unexplored(limit=max(1, p.W))
+        if not batch:
+            break
+        recs = yield from acc.get_many(batch)
+        extra_vids: list[int] = []
+        extra_set: set[int] = set()
+        for v in batch:
+            pid = index.page_of(v)
+            for u in index.page_record_ids(pid):
+                if u not in bm.explored and u not in batch and u not in extra_set:
+                    extra_set.add(u)
+                    extra_vids.append(u)
+        extra_recs: dict[int, object] = {}
+        if extra_vids:
+            extra_recs = yield from acc.get_many(extra_vids)
+        group = batch + extra_vids
+        rec_list = [recs[v] if v in recs else extra_recs[v] for v in group]
+        yield ("compute", len(group) * cost.beam_visit_s)
+        dists = yield from _refine_records(ctx, pq, rec_list)
+        for v, rec, dv in zip(group, rec_list, dists):
+            if v in bm.explored:
+                continue
+            dist = float(dv)
+            if v in extra_set and bm.window_len >= p.L and dist >= bm.tail:
+                continue
+            refined[v] = dist
+            bm.mark(v)
+            bm.insert(v, dist)
+            hops += 1
+            fresh = _fresh_union(bm, [rec])
+            if fresh or bm.pending():
+                yield from bm.step(fresh)
+
+    ids, ds = _finish(refined, p.k)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
+
+
 # -------------------------------------------------- PipeANN-style pipelining
 
 
@@ -699,6 +994,8 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     """Pipelined best-first search [15]: keep up to `pipe_depth` reads in
     flight and process completions in arrival order (relaxed ordering) —
     lower latency, some wasted I/O."""
+    if ctx.device_beam:
+        return (yield from _pipeann_search_device(ctx, q, p))
     cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
     index = ctx.index
     d = qb.dim
@@ -760,12 +1057,77 @@ def pipeann_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
 
 
+def _pipeann_search_device(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """Pipelined search with engine-resident frontier selection: arrivals
+    refine through the normal path, expansion is one beam op per record."""
+    cost, qb, acc = ctx.cost, ctx.qb, ctx.accessor
+    index = ctx.index
+    d = qb.dim
+    yield ("compute", _query_prep_cost(cost, d))
+    pq = RabitQuantizer.prepare_query(qb, q)
+
+    bm = _DeviceBeam(ctx, pq, p.L)
+    yield from bm.step([ctx.medoid])
+
+    refined: dict[int, float] = {}
+    hops = 0
+    reads0 = acc.reads
+    outstanding: dict[int, int] = {}  # token -> vid
+    inflight: set[int] = set()
+
+    def process(v, rec):
+        nonlocal hops
+        refined[v] = float((yield from _refine_records(ctx, pq, [rec]))[0])
+        bm.mark(v)
+        hops += 1
+        fresh = _fresh_union(bm, [rec])
+        if fresh:
+            yield from bm.step(fresh)
+
+    while True:
+        cands = [v for v in bm.unexplored() if v not in inflight]
+        while len(outstanding) < p.pipe_depth and cands:
+            v = cands.pop(0)
+            if acc.resident(v):
+                rec = yield from acc.get(v)
+                yield ("compute", cost.beam_visit_s)
+                yield from process(v, rec)
+                cands = [x for x in bm.unexplored() if x not in inflight]
+                continue
+            pid = index.page_of(v)
+            yield ("compute", cost.io_submit_s)
+            tokens = yield ("submit", [pid])
+            outstanding[tokens[0]] = v
+            inflight.add(v)
+
+        if not outstanding:
+            if not bm.unexplored():
+                break
+            continue
+
+        token, pid, page = yield ("wait_any", set(outstanding))
+        v = outstanding.pop(token)
+        inflight.discard(v)
+        acc.reads += 1
+        yield ("compute", cost.page_parse_s + cost.record_decode_s)
+        rec = acc.install(v, pid, page)
+        if v in bm.explored:
+            continue  # over-fetched: candidate already pruned/processed
+        yield ("compute", cost.beam_visit_s)
+        yield from process(v, rec)
+
+    ids, ds = _finish(refined, p.k)
+    return QueryResult(ids=ids, dists=ds, hops=hops, reads=acc.reads - reads0)
+
+
 # -------------------------------------------------------- in-memory Vamana
 
 
 def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     """Fully in-memory Vamana greedy beam search — the paper's Fig. 1/12
     reference point.  Exact fp32 distances, no I/O ever."""
+    if ctx.device_beam:
+        return (yield from _inmemory_search_device(ctx, q, p))
     assert ctx.base is not None
     cost = ctx.cost
     base = ctx.base
@@ -809,6 +1171,35 @@ def inmemory_search(ctx: SearchContext, q: np.ndarray, p: SearchParams):
     ids = np.asarray([v for _, v in topk], dtype=np.int64)
     ds = np.asarray([e for e, _ in topk], dtype=np.float32)
     return QueryResult(ids=ids, dists=ds, hops=hops, reads=0)
+
+
+def _inmemory_search_device(ctx: SearchContext, q: np.ndarray, p: SearchParams):
+    """In-memory greedy search with the fp32 (kind="full") beam step: every
+    hop ships the expanded neighbors' raw vectors once and reads back only
+    the frontier; ``topk=p.k`` keeps the heap head downloaded so the final
+    answer needs no extra exchange (marks never change the heap, so the last
+    step's readout is already final)."""
+    assert ctx.base is not None
+    cost = ctx.cost
+    graph = ctx.index.graph
+
+    bm = _DeviceBeam(ctx, None, p.L, kind="full", query=q)
+    yield from bm.step([ctx.medoid], topk=p.k)
+    hops = 0
+    while True:
+        unexp = bm.unexplored(limit=1)
+        if not unexp:
+            break
+        v = unexp[0]
+        bm.mark(v)
+        hops += 1
+        nbrs = [int(u) for u in graph.neighbors(v) if int(u) not in bm.seen]
+        if nbrs:
+            yield ("compute", cost.beam_visit_s)
+            yield from bm.step(nbrs, topk=p.k)
+
+    ids, ds = bm.topk
+    return QueryResult(ids=ids[: p.k], dists=ds[: p.k], hops=hops, reads=0)
 
 
 ALGORITHMS = {

@@ -38,6 +38,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import beam as beam_mod
 from repro.core import placement as placement_mod
 from repro.core.sim import SSD, SSDConfig
 
@@ -98,9 +99,10 @@ class ScatterJoin:
     completion time plus one merge collective (multi-shard only)."""
 
     __slots__ = ("worker", "gen", "qid", "rows", "n_parts", "remaining",
-                 "out", "direct", "t_done")
+                 "out", "direct", "t_done", "beam_req", "beam_parts")
 
-    def __init__(self, worker, gen, qid, rows: int, n_parts: int):
+    def __init__(self, worker, gen, qid, rows: int, n_parts: int,
+                 beam_req=None):
         self.worker = worker
         self.gen = gen
         self.qid = qid
@@ -110,11 +112,18 @@ class ScatterJoin:
         self.out: np.ndarray | None = None
         self.direct = None       # single-part passthrough result
         self.t_done = 0.0
+        # multi-shard beam scatter: the original BeamRequest (state + pending
+        # inserts/marks) plus the per-shard local top-L (ids, dists) slices;
+        # the engine finalizes via DistanceEngine.beam_finalize at merge time
+        self.beam_req = beam_req
+        self.beam_parts: list[tuple[np.ndarray, np.ndarray]] = []
 
     def put(self, ridx, val, t: float) -> bool:
         """Deliver one shard's slice; True when the join completed."""
         if ridx is None:
             self.direct = val    # the untouched original request's results
+        elif self.beam_req is not None:
+            self.beam_parts.append(val)   # (local ids, dists) of one shard
         else:
             if self.out is None:
                 self.out = np.empty(self.rows, dtype=np.asarray(val).dtype)
@@ -125,6 +134,18 @@ class ScatterJoin:
 
     def merge(self):
         return self.direct if self.direct is not None else self.out
+
+    def merge_beam_candidates(self) -> tuple[np.ndarray, np.ndarray]:
+        """Global top-L over the union of the per-shard local top-Ls — the
+        ``merge_topk`` half of the dist_search idiom.  Exact: every global
+        top-L candidate is in its owning shard's local top-L, so the union
+        contains the global answer and ranking by the (distance, id) tuple
+        reproduces the single-shard step bitwise."""
+        L = self.beam_req.state.L
+        ids = np.concatenate([i for i, _ in self.beam_parts])
+        ds = np.concatenate([d for _, d in self.beam_parts])
+        order = np.lexsort((ids, ds))[:L]
+        return ids[order], ds[order]
 
 
 class ShardRouter:
@@ -150,7 +171,11 @@ class ShardRouter:
         return self.ssds[int(self.plan.page_shard[pid])]
 
     def has_pending(self) -> bool:
-        return any(self.pending_rows)
+        # test the queues, NOT the row counts: a fused beam step may park
+        # with zero fresh rows (pending-inserts-only — e.g. Starling's
+        # refined admissions between reads), and the stall flush must still
+        # see that join or the scheduler exits with its coroutine parked
+        return any(self.pending)
 
     def split(self, sc: ShardScatter) -> list:
         """Partition a scatter's rows by owning shard: ``[(shard, subrequest,
@@ -165,6 +190,34 @@ class ShardRouter:
         first = int(shards[0])
         if bool((shards == first).all()):
             return [(first, req, None)]
+        if isinstance(req, beam_mod.BeamRequest):
+            # multi-shard beam step: each owning shard scores its slice of
+            # the fresh frontier on LOCAL ids and returns its local top-L
+            # (mask before translation — vid_base applies only at the
+            # gather); the join merges and the engine finalizes against the
+            # request's resident state
+            parts = []
+            fresh = np.asarray(req.fresh, dtype=np.int64)
+            for s in range(self.plan.n_shards):
+                ridx = np.flatnonzero(shards == s)
+                if ridx.size == 0:
+                    continue
+                sub = beam_mod.BeamShardPart(
+                    kind=req.kind,
+                    pq=req.pq,
+                    query=req.query,
+                    vectors=(None if req.vectors is None
+                             else np.asarray(req.vectors)[ridx]),
+                    ids=fresh[ridx],
+                    rows=int(ridx.size),
+                    flop_s=req.flop_s * (ridx.size / req.rows),
+                    L=req.state.L,
+                    qb=req.qb,
+                    tenant=req.tenant,
+                    vid_base=req.vid_base,
+                )
+                parts.append((s, sub, ridx))
+            return parts
         parts = []
         for s in range(self.plan.n_shards):
             ridx = np.flatnonzero(shards == s)
@@ -185,5 +238,6 @@ class ShardRouter:
             parts.append((s, sub, ridx))
         return parts
 
-    def make_join(self, worker, gen, qid, rows: int, n_parts: int) -> ScatterJoin:
-        return ScatterJoin(worker, gen, qid, rows, n_parts)
+    def make_join(self, worker, gen, qid, rows: int, n_parts: int,
+                  beam_req=None) -> ScatterJoin:
+        return ScatterJoin(worker, gen, qid, rows, n_parts, beam_req=beam_req)

@@ -98,6 +98,19 @@ class CostModel:
                                          # charged once per multi-shard
                                          # scatter, never when one shard owns
                                          # every row (S=1 parity)
+    beam_step_s: float = 0.4e-6          # one fused on-device beam step
+                                         # (score + visited mask + top-k merge
+                                         # + frontier select in a single
+                                         # launch), amortized over every beam
+                                         # op in the rendezvous flush group —
+                                         # replaces the per-row distance
+                                         # download the host path pays
+    beam_visit_s: float = 0.5e-6         # residual host bookkeeping per
+                                         # explored vertex when the beam lives
+                                         # on device (frontier cursor + I/O
+                                         # issue only); the insort/merge share
+                                         # of visit_overhead_s moved into the
+                                         # fused call
 
     def estimate(self, count: int, dim: int) -> float:
         """Level-1 binary distance estimates for `count` vertices."""
@@ -120,8 +133,15 @@ class CostModel:
         participating query's rows plus a SINGLE kernel dispatch, amortized
         across the whole rendezvous batch (instead of one dispatch per query).
         ``kind`` selects the dispatch constant: fp32 ``refine_full`` batches
-        ("full") launch through a different kernel than the quantized paths."""
-        dispatch = self.full_dispatch_s if kind == "full" else self.batch_dispatch_s
+        ("full") launch through a different kernel than the quantized paths,
+        and fused beam steps ("beam"/"beam_part") launch the combined
+        score+merge+select call (``beam_step_s``)."""
+        if kind.startswith("beam"):
+            dispatch = self.beam_step_s
+        elif kind == "full":
+            dispatch = self.full_dispatch_s
+        else:
+            dispatch = self.batch_dispatch_s
         return dispatch + total_flop_s
 
 
@@ -166,6 +186,14 @@ class WorkloadStats:
     shard_merges: int = 0      # cross-shard top-k merges (multi-shard
                                # scatters only; single-shard scatters pass
                                # the owning shard's results through)
+    # fused on-device beam steps (frontier replies instead of raw distances)
+    beam_ops: int = 0          # per-coroutine beam ops absorbed by flushes
+    beam_flushes: int = 0      # fused beam-step launches (one per beam group
+                               # per flush — the ONE exchange per hop)
+    beam_rows: int = 0         # fresh vertices scored inside beam steps
+    dist_downloads: int = 0    # score/scatter replies that shipped raw
+                               # per-row distances back to the host (beam
+                               # replies return frontiers and do not count)
     # HBM record-cache tier (device-resident hot records above the host pool)
     hbm_hits: int = 0          # record lookups served from HBM cache slots
     hbm_misses: int = 0        # lookups that fell through to the host pool
@@ -212,3 +240,8 @@ class WorkloadStats:
     @property
     def rows_per_flush(self) -> float:
         return self.score_rows / self.score_flushes if self.score_flushes else 0.0
+
+    @property
+    def downloads_per_query(self) -> float:
+        """Host<->device exchanges per query that carried raw distances."""
+        return self.dist_downloads / self.n_queries if self.n_queries else 0.0

@@ -62,16 +62,16 @@ def _refine(index: DeviceIndex, ids: jnp.ndarray, qr: jnp.ndarray):
     return jnp.einsum("bmd,bmd->bm", diff, diff)
 
 
-def _merge_and_trim(ids, dist, visited, new_ids, new_dist, L):
+def _merge_and_trim(ids, dist, visited, new_ids, new_dist, L, sentinel):
     """Concat beams with expansions, dedupe by id, keep top-L by distance."""
     all_ids = jnp.concatenate([ids, new_ids], axis=1)
     all_dist = jnp.concatenate([dist, new_dist], axis=1)
     all_vis = jnp.concatenate([visited, jnp.zeros_like(new_ids, dtype=bool)], axis=1)
 
-    # dedupe: sort by id; runs of equal ids have length <= 2 here (beam rows
-    # are unique post-trim, adjacency rows are unique), so one neighbor-pair
-    # aggregation suffices: the first copy takes min(dist) and OR(visited),
-    # the second copy is killed.
+    # dedupe: sort by id; runs of equal REAL ids have length <= 2 here (beam
+    # rows are unique post-trim, adjacency rows are unique), so one
+    # neighbor-pair aggregation suffices: the first copy takes min(dist) and
+    # OR(visited), the second copy is killed.
     order = jnp.argsort(all_ids, axis=1)
     sid = jnp.take_along_axis(all_ids, order, axis=1)
     sdist = jnp.take_along_axis(all_dist, order, axis=1)
@@ -84,6 +84,12 @@ def _merge_and_trim(ids, dist, visited, new_ids, new_dist, L):
     svis_nxt = jnp.roll(svis, -1, axis=1)
     sdist = jnp.where(nxt_same, jnp.minimum(sdist, sdist_nxt), sdist)
     svis = jnp.where(nxt_same, svis | svis_nxt, svis)
+    # a killed copy must ALSO forfeit its id: on an underfull beam the
+    # (INF, visited) tail survives the trim, and a ghost that kept a real id
+    # would pair with that id's live copy in a LATER merge — the OR(visited)
+    # aggregation would then falsely mark the live candidate visited (and a
+    # 3-long run would break the pairwise-dedupe assumption above)
+    sid = jnp.where(prv_same, sentinel, sid)
     sdist = jnp.where(prv_same, INF, sdist)
     svis = jnp.where(prv_same, True, svis)
 
@@ -143,7 +149,9 @@ def batch_search(
         est = jnp.where(fresh & active[:, None], est, INF)
         seen = seen.at[jnp.arange(ids.shape[0])[:, None], neigh].set(True)
 
-        ids, dist, visited = _merge_and_trim(ids, dist, visited, neigh, est, ids.shape[1])
+        ids, dist, visited = _merge_and_trim(
+            ids, dist, visited, neigh, est, ids.shape[1], n
+        )
         return (ids, dist, visited, seen, steps + active.astype(jnp.int32)), None
 
     (ids, dist, visited, seen, steps), _ = jax.lax.scan(
