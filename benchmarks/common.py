@@ -80,6 +80,19 @@ def device_beam_active() -> bool:
     return baselines_mod.default_device_beam()
 
 
+def set_scheduler(scheduler: str, sla_ms: float | None = None) -> None:
+    """Select the engine's scheduling policy (and optional per-query SLA in
+    milliseconds) for every system the benchmarks build (threads run.py's
+    --scheduler / --sla-ms flags through SystemConfig)."""
+    baselines_mod.set_default_scheduler(scheduler, sla_ms)
+
+
+def scheduler_active() -> dict:
+    """The scheduler settings systems will actually get, for results.json."""
+    scheduler, sla_ms = baselines_mod.default_scheduler()
+    return {"policy": scheduler, "sla_ms": sla_ms}
+
+
 def set_platform(platform: str = "cpu") -> None:
     """Pin the JAX platform (and its XLA tuning flags) BEFORE any kernel
     traces — only takes effect at the beginning of the program.  No-op when

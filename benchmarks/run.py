@@ -3,7 +3,8 @@
   python -m benchmarks.run [--quick | --full] [--only NAME] [--backend NAME]
                            [--fuse] [--fuse-rows N] [--shared-rendezvous]
                            [--overlap-flush] [--hbm-tier] [--hbm-slots N]
-                           [--device-beam] [--calibration PATH] [--strict]
+                           [--device-beam] [--scheduler NAME] [--sla-ms MS]
+                           [--calibration PATH] [--strict]
 
 Writes benchmarks/out/results.json and prints each table with the paper
 claims it validates.  --strict exits non-zero when any module errors or any
@@ -79,6 +80,14 @@ def main():
                     help="fused on-device beam step (score + visited mask + "
                          "top-k merge + frontier selection in one engine "
                          "call) for every system")
+    ap.add_argument("--scheduler", default=None, choices=["rr", "sla"],
+                    help="engine scheduling policy for every system "
+                         "(rr: FIFO round-robin, the default; sla: "
+                         "earliest-deadline-first + feedback steering)")
+    ap.add_argument("--sla-ms", type=float, default=None,
+                    help="per-query SLA in milliseconds (enables deadline "
+                         "accounting; with --scheduler sla also the EDF "
+                         "deadline and the feedback target)")
     ap.add_argument("--calibration", default=None, metavar="PATH",
                     help="per-backend CostModel overrides from "
                          "benchmarks/calibrate.py (benchmarks/out/"
@@ -104,11 +113,14 @@ def main():
                        args.hbm_slots)
     if args.device_beam:
         common.set_device_beam(True)
+    if args.scheduler or args.sla_ms is not None:
+        common.set_scheduler(args.scheduler or "rr", args.sla_ms)
     if args.calibration:
         common.set_calibration(args.calibration)
     print(f"distance backend: {common.active_backend()}  fuse: {common.fuse_active()}"
           f"  hbm: {common.hbm_active()}"
-          f"  device_beam: {common.device_beam_active()}")
+          f"  device_beam: {common.device_beam_active()}"
+          f"  scheduler: {common.scheduler_active()}")
 
     os.makedirs(common.OUT_DIR, exist_ok=True)
     results = {}
@@ -131,6 +143,7 @@ def main():
         res["fuse"] = common.fuse_active()
         res["hbm"] = common.hbm_active()
         res["device_beam"] = common.device_beam_active()
+        res["scheduler"] = common.scheduler_active()
         res["calibration"] = args.calibration
         results[modname] = res
         print(f"\n=== {res.get('name', modname)}  ({dt:.1f}s) ===")

@@ -38,20 +38,25 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.explore:
-        from repro.analysis.explore import smoke
+        from repro.analysis.explore import smoke, smoke_sla
 
         algorithms = tuple(a for a in args.algorithms.split(",") if a)
         reports = smoke(algorithms=algorithms, n_schedules=args.schedules,
                         base_seed=args.seed)
+        # The SLA scheduler leg: a pure-EDF serving plane under burst
+        # arrivals, where equal deadlines create the slack ties to permute.
+        reports.update(smoke_sla(n_schedules=args.schedules,
+                                 base_seed=args.seed))
         failed = False
         for name, reps in reports.items():
             worker_ties = sum(r.ties["worker"] for r in reps)
             event_ties = sum(r.ties["event"] for r in reps)
+            slack_ties = sum(r.ties.get("slack", 0) for r in reps)
             bad = [r for r in reps if not r.equal]
             verdict = "schedule-invariant" if not bad else "MISMATCH"
             print(f"{name}: {len(reps) - 1} schedule(s) explored, "
-                  f"{worker_ties} worker tie(s), {event_ties} event tie(s) "
-                  f"permuted -> {verdict}")
+                  f"{worker_ties} worker tie(s), {event_ties} event tie(s), "
+                  f"{slack_ties} slack tie(s) permuted -> {verdict}")
             for r in bad:
                 failed = True
                 print(f"  seed {r.seed}: {r.first_diff}")

@@ -69,8 +69,11 @@ ENGINE_OPS: dict[str, OpSpec] = {
 
 # Scheduler-internal completion-event kinds: these legitimately appear in the
 # same dispatch functions as engine ops but are NOT part of the coroutine
-# protocol (nothing ever yields them).
-EVENT_KINDS: frozenset[str] = frozenset({"callback", "resume"})
+# protocol (nothing ever yields them).  "arrival" is the SLA scheduler's
+# query-arrival event (an SlaPlan timestamp releasing a query into the
+# admission queue); it exists only when a plan with nonzero arrivals is
+# attached, so default runs carry none.
+EVENT_KINDS: frozenset[str] = frozenset({"callback", "resume", "arrival"})
 
 # Buffer-pool protocol names the pairing / purity lint rules key on.
 WINDOW_OPENERS: frozenset[str] = frozenset({"begin_load"})

@@ -52,6 +52,8 @@ _DEFAULT_CALIBRATION: dict | None = None
 _DEFAULT_HBM = False
 _DEFAULT_HBM_SLOTS: int | None = None
 _DEFAULT_DEVICE_BEAM = False
+_DEFAULT_SCHEDULER = "rr"
+_DEFAULT_SLA_MS: float | list | None = None
 
 
 def set_default_fuse(
@@ -112,6 +114,26 @@ def set_default_device_beam(on: bool) -> None:
 
 def default_device_beam() -> bool:
     return _DEFAULT_DEVICE_BEAM
+
+
+def set_default_scheduler(
+    scheduler: str, sla_ms: float | list | None = None
+) -> None:
+    """Process-wide default for the coroutine scheduling policy — the hook
+    ``benchmarks/run.py --scheduler/--sla-ms`` threads through.  "rr" is
+    FIFO round-robin (bitwise the pre-SLA engine); "sla" is EDF ordering by
+    the per-tenant deadlines ``sla_ms`` induces (docs/scheduling.md)."""
+    global _DEFAULT_SCHEDULER, _DEFAULT_SLA_MS
+    from repro.core.scheduling import SCHEDULERS
+
+    assert scheduler in SCHEDULERS, f"unknown scheduler {scheduler!r}"
+    _DEFAULT_SCHEDULER = scheduler
+    if sla_ms is not None:
+        _DEFAULT_SLA_MS = sla_ms
+
+
+def default_scheduler() -> tuple[str, float | list | None]:
+    return _DEFAULT_SCHEDULER, _DEFAULT_SLA_MS
 
 
 def set_default_calibration(calib: dict | None) -> None:
@@ -203,6 +225,22 @@ class SystemConfig:
                                   # unsharded.  n_shards=1 is bitwise
                                   # identical to unsharded (the parity
                                   # contract bench_sharded.py enforces).
+    scheduler: str | None = None  # coroutine scheduling policy: "rr" = FIFO
+                                  # round-robin, bitwise the pre-SLA engine;
+                                  # "sla" = EDF by deadline slack (admission,
+                                  # ready picks, stall-flush initiator), fed
+                                  # by sla_ms deadlines (None -> process
+                                  # default; see docs/scheduling.md)
+    sla_ms: float | list | None = None  # per-tenant latency target in ms
+                                  # (scalar = every tenant; sequence = one
+                                  # per tenant).  Induces per-query deadlines
+                                  # arrival + sla; powers deadline hit-rate
+                                  # accounting and the SLA feedback loop.
+    sla_feedback: bool = True     # in sla mode with sla_ms set: run the
+                                  # online feedback controller (beam width /
+                                  # tenant quota / fuse_rows steering).  Off
+                                  # = pure EDF, the schedule-invariant mode
+                                  # the explorer covers.
     verify_protocol: bool = False  # arm the dynamic protocol checker
                                   # (repro.analysis.protocol): validates every
                                   # pool/HBM slot transition against the
@@ -233,7 +271,7 @@ class System:
 
     def run(
         self, queries: np.ndarray, ssd_config: SSDConfig | None = None,
-        schedule=None,
+        schedule=None, sla=None,
     ) -> tuple[list, WorkloadStats]:
         ssd = SSD(ssd_config)
         shards = None
@@ -266,10 +304,12 @@ class System:
             fuse_rows=self.config.fuse_rows,
             shared_rendezvous=bool(self.config.shared_rendezvous),
             overlap_flush=bool(self.config.overlap_flush),
+            scheduler=self.config.scheduler or "rr",
             hbm=self.hbm,
             schedule=schedule,
             verify=self.checker,
             shards=shards,
+            sla=sla,
         )
         if self.checker is not None:
             self.checker.raise_if_violations()
@@ -349,6 +389,14 @@ def build_system(
         device_beam=(
             default_device_beam()
             if config.device_beam is None else config.device_beam
+        ),
+        scheduler=(
+            default_scheduler()[0]
+            if config.scheduler is None else config.scheduler
+        ),
+        sla_ms=(
+            default_scheduler()[1]
+            if config.sla_ms is None else config.sla_ms
         ),
     )
     cost = cost or CostModel()
@@ -550,10 +598,14 @@ def evaluate(
         "shared_rendezvous": bool(system.config.shared_rendezvous),
         "overlap_flush": bool(system.config.overlap_flush),
         "resident_plane": bool(system.config.resident_plane),
+        "scheduler": system.config.scheduler or "rr",
         "recall@k": rec,
         "qps": stats.qps,
         "mean_latency_ms": stats.mean_latency_ms,
         "p99_latency_ms": stats.p99_latency_ms(),
+        "mean_service_ms": stats.mean_service_ms,
+        "queue_wait_s": stats.queue_wait_s,
+        "deadline_hit_rate": stats.deadline_hit_rate,
         "ios_per_query": stats.ios_per_query,
         "coalesced_reads": stats.coalesced_reads,
         "hit_rate": stats.hit_rate,

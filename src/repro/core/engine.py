@@ -105,6 +105,18 @@ engine folds them into the resident state exactly once via
 ``DistanceEngine.beam_finalize``.  ``WorkloadStats.dist_downloads`` counts
 the replies that still ship raw distances — beam replies do not, which is
 the whole point: downloads/query drops from ~hops x kinds to ~hops.
+
+SLA-aware scheduling (``EngineConfig.scheduler``, core.scheduling): with
+``scheduler="sla"`` and an ``SlaPlan`` handed to ``Engine.run``, queries
+carry arrival times (withheld from admission until their "arrival" event
+fires) and per-tenant deadlines; admission, per-worker ready picks, and
+stall-flush initiator selection all order by deadline (EDF), and the plan's
+feedback controller may steer the ``fuse_rows`` budget online.  The default
+``scheduler="rr"`` keeps every pick FIFO and is bitwise identical to the
+pre-SLA engine; a plan with arrivals additionally makes ``latencies``
+measure completion-minus-arrival (queue wait included — the old
+dispatch-relative number is kept in ``WorkloadStats.service_times``), while
+plan=None keeps the old accounting bitwise.  See docs/scheduling.md.
 """
 
 from __future__ import annotations
@@ -118,6 +130,7 @@ import numpy as np
 
 from repro.core import beam as beam_mod
 from repro.core import distance as distance_mod
+from repro.core.scheduling import SCHEDULERS
 from repro.core.sim import SSD, CostModel, WorkloadStats
 
 
@@ -136,21 +149,31 @@ class EngineConfig:
                                  # (off = drain the I/O first; at one worker
                                  # every completion is the initiator's own, so
                                  # the flag cannot change results there)
+    scheduler: str = "rr"        # ready-queue policy: "rr" = FIFO round-robin
+                                 # (bitwise the pre-SLA engine); "sla" = EDF —
+                                 # admission, ready picks and stall-flush
+                                 # initiator selection order by deadline slack
+                                 # from the run's SlaPlan (core.scheduling)
 
 
 class _Worker:
     __slots__ = ("wid", "t", "ready", "active", "deferred_charge", "done_queries",
-                 "pending", "pending_rows")
+                 "pending", "pending_rows", "free_gens")
 
     def __init__(self, wid: int):
         self.wid = wid
         self.t = 0.0
-        self.ready: deque = deque()  # (gen, resume_value, qid)
+        self.ready: deque = deque()  # (gen, resume_value, qid, charge_switch)
         self.active = 0
         self.deferred_charge = 0.0
         self.done_queries = 0
         self.pending: list = []      # rendezvous buffer: (gen, qid, ScoreRequest)
         self.pending_rows = 0
+        # "sla" mode only: gen ids this worker's LAST flush resumed.  The
+        # switch-free credit of a flush belongs to whichever of them the EDF
+        # pick runs FIRST — per-entry flags (the rr rule) would let a resume
+        # that ran only after an intervening coroutine skip its switch charge.
+        self.free_gens: set | None = None
 
 
 class Engine:
@@ -192,8 +215,14 @@ class Engine:
         self,
         make_coroutine: Callable[[int, np.ndarray], object],
         queries: np.ndarray,
+        sla=None,                   # core.scheduling.SlaPlan: arrival times,
+                                    # deadlines and the feedback controller
+                                    # (None == every query arrives at t=0 and
+                                    # latency == service time, bitwise the
+                                    # pre-SLA engine)
     ) -> tuple[list, WorkloadStats]:
         cfg = self.config
+        assert cfg.scheduler in SCHEDULERS, f"unknown scheduler {cfg.scheduler!r}"
         if self.dist is None:
             self.dist = distance_mod.get_engine()
         # schedule-exploration / protocol-verification seams (both None in
@@ -202,6 +231,10 @@ class Engine:
         sched = self.schedule
         verify = self.verify
         router = self.shards
+        plan = sla
+        edf = cfg.scheduler == "sla"
+        deadlines = plan.deadlines if plan is not None else None
+        controller = plan.controller if plan is not None else None
         workers = [_Worker(i) for i in range(cfg.n_workers)]
         query_queue: deque[int] = deque(range(len(queries)))
         start_time: dict[int, float] = {}
@@ -245,10 +278,11 @@ class Engine:
             batch up front instead)."""
             # Prune dedup entries whose completion no future read can observe.
             # A worker only matters for the horizon if it can still issue
-            # reads: it has active coroutines, or queries remain to admit
-            # (an idle drained worker would otherwise pin the horizon at its
-            # final time and the dict would grow one entry per page forever).
-            if query_queue:
+            # reads: it has active coroutines, or queries remain to admit —
+            # including queries that have not ARRIVED yet (an idle drained
+            # worker would otherwise pin the horizon at its final time and
+            # the dict would grow one entry per page forever).
+            if query_queue or n_unarrived:
                 horizon = min(w.t for w in workers)
             else:
                 horizon = min((w.t for w in workers if w.active > 0),
@@ -285,6 +319,114 @@ class Engine:
             heapq.heappush(events, (time, rank, seq, kind, payload))
             seq += 1
 
+        # Open-loop arrivals (SlaPlan): a query with arrival > 0 is withheld
+        # from the admission queue until its "arrival" event fires — the
+        # busy-poll branch of the global loop then jumps time to it exactly
+        # like an I/O completion.  All-zero arrivals (and plan=None) seed the
+        # full queue up front, the pre-SLA admission order.
+        n_unarrived = 0
+        if plan is not None:
+            arr = plan.arrivals
+            assert arr.shape == (len(queries),), (
+                f"SlaPlan has {arr.shape[0]} arrivals for {len(queries)} queries"
+            )
+            if np.any(arr > 0.0):
+                query_queue = deque(
+                    int(q) for q in np.flatnonzero(arr <= 0.0)
+                )
+                for q in np.flatnonzero(arr > 0.0):
+                    push_event(float(arr[q]), "arrival", int(q))
+                    n_unarrived += 1
+
+        def fuse_budget() -> int:
+            """The rendezvous flush row budget — static ``cfg.fuse_rows``
+            unless the SLA feedback controller is steering it online."""
+            if controller is None:
+                return cfg.fuse_rows
+            return controller.fuse_rows(cfg.fuse_rows)
+
+        def qdeadline(qid: int) -> float:
+            return float(deadlines[qid]) if deadlines is not None else float("inf")
+
+        def pick_query(w: _Worker) -> int:
+            """Pop the next query to admit: FIFO in rr; earliest deadline in
+            sla (EDF starts at admission — a slack-critical query must not
+            sit behind the hot tenant's backlog in the arrival queue)."""
+            if not edf or deadlines is None or len(query_queue) == 1:
+                return query_queue.popleft()
+            best = None
+            best_key = None
+            for q in query_queue:
+                key = (qdeadline(q), q)
+                if best_key is None or key < best_key:
+                    best, best_key = q, key
+            if sched is not None:
+                tied = [q for q in query_queue if qdeadline(q) == best_key[0]]
+                if len(tied) > 1:
+                    sched.ties["slack"] += 1
+                    best = min(tied, key=lambda q: (sched.slack_rank(q), q))
+            query_queue.remove(best)
+            return best
+
+        def pop_ready(w: _Worker) -> tuple:
+            """Pop the next ready entry: FIFO in rr (bitwise the pre-SLA
+            engine, per-entry switch flags untouched); in sla, the entry with
+            the earliest deadline (queue position breaks exact ties — or the
+            explorer's slack_rank when a schedule policy is attached, since
+            equal-slack picks are a genuine scheduling race).  The sla pop
+            also resolves the flush switch-free credit: the FIRST pop after a
+            flush is free iff it resumes one of that flush's own coroutines
+            (see _Worker.free_gens)."""
+            if not edf:
+                return w.ready.popleft()
+            if deadlines is None or len(w.ready) == 1:
+                entry = w.ready.popleft()
+            else:
+                best_i = 0
+                best_key = (qdeadline(w.ready[0][2]), 0)
+                for i in range(1, len(w.ready)):
+                    key = (qdeadline(w.ready[i][2]), i)
+                    if key < best_key:
+                        best_i, best_key = i, key
+                if sched is not None:
+                    tied = [
+                        i for i in range(len(w.ready))
+                        if qdeadline(w.ready[i][2]) == best_key[0]
+                    ]
+                    if len(tied) > 1:
+                        sched.ties["slack"] += 1
+                        best_i = min(
+                            tied,
+                            key=lambda i: (sched.slack_rank(w.ready[i][2]), i),
+                        )
+                entry = w.ready[best_i]
+                del w.ready[best_i]
+            gen, value, qid, charge_switch = entry
+            if w.free_gens is not None:
+                # one credit per flush, consumed by the first pop whatever it
+                # is: free only when it IS one of the flush's own resumes
+                charge_switch = id(gen) not in w.free_gens
+                w.free_gens = None
+            return gen, value, qid, charge_switch
+
+        def parked_deadline(w: _Worker) -> float:
+            """Earliest deadline among the work a stalled worker has parked
+            in the shared/sharded rendezvous — the sla stall-flush initiator
+            key (inf in rr / without deadlines: selection degenerates to the
+            earliest-clock rule)."""
+            if not edf or deadlines is None:
+                return float("inf")
+            best = float("inf")
+            for wk, _, qid, _ in shared_pending:
+                if wk is w:
+                    best = min(best, qdeadline(qid))
+            if router is not None:
+                for plist in router.pending:
+                    for join, _, _ in plist:
+                        if join.worker is w:
+                            best = min(best, qdeadline(join.qid))
+            return best
+
         # buffer pools with coroutines parked on LOCKED slots (load_wait op),
         # keyed by id so registration order — not hash order — drives the
         # resume drain; their pending_resumes queues are drained after every
@@ -306,7 +448,9 @@ class Engine:
                     push_event(now, "resume", (wkr, gen, rec, qid))
 
         def apply_due_events(now: float) -> None:
-            """Apply completions (callbacks / worker resumes) due by `now`."""
+            """Apply completions (callbacks / worker resumes / query
+            arrivals) due by `now`."""
+            nonlocal n_unarrived
             while events and events[0][0] <= now:
                 time, _, _, kind, payload = heapq.heappop(events)
                 if sched is not None and events and events[0][0] == time:
@@ -322,6 +466,11 @@ class Engine:
                     worker, gen, value, qid = payload
                     worker.t = max(worker.t, time)
                     worker.ready.append((gen, value, qid, True))
+                elif kind == "arrival":
+                    # the query is now admissible; a worker clamps its clock
+                    # to the arrival time when it actually picks it up
+                    query_queue.append(payload)
+                    n_unarrived -= 1
 
         # one-time resident-table pin: the first dispatch of a run that
         # touches a quantized index charges the register-once upload of its
@@ -458,8 +607,12 @@ class Engine:
                 # the first resume continues straight out of the fused
                 # dispatch — no switch charge, so a rendezvous of one costs
                 # exactly what inline execution costs; every later resume is
-                # a genuine coroutine switch and pays for it
-                w.ready.append((gen, val, qid, i > 0))
+                # a genuine coroutine switch and pays for it.  In sla mode
+                # the EDF pick decides which resume runs first, so the credit
+                # moves to pop time (free_gens) instead of entry flags.
+                w.ready.append((gen, val, qid, True if edf else i > 0))
+            if edf:
+                w.free_gens = {id(gen) for gen, _, _ in pend}
 
         # system-wide shared rendezvous: (worker, gen, qid, req) from ALL
         # workers, flushed at fuse_rows or when every worker is stalled
@@ -480,12 +633,18 @@ class Engine:
             pend, shared_pending, shared_rows = shared_pending, [], 0
             outs = dispatch_batch(initiator, [r for _, _, _, r in pend])
             first_own = True
+            own_gens = set()
             for (wkr, gen, qid, _), val in zip(pend, outs):
                 if wkr is initiator:
-                    wkr.ready.append((gen, val, qid, not first_own))
+                    wkr.ready.append(
+                        (gen, val, qid, True if edf else not first_own)
+                    )
                     first_own = False
+                    own_gens.add(id(gen))
                 else:
                     push_event(initiator.t, "resume", (wkr, gen, val, qid))
+            if edf and own_gens:
+                initiator.free_gens = own_gens
 
         def finish_beam_join(join) -> object:
             """Resolve a completed beam join into its BeamResult: the
@@ -550,6 +709,7 @@ class Engine:
                 if verify is not None:
                     verify.at_flush()
             first_own = True
+            own_gens = set()
             for join in done:
                 t_done = join.t_done
                 if join.n_parts > 1:
@@ -565,14 +725,18 @@ class Engine:
                 if join.worker is initiator:
                     initiator.t = max(initiator.t, t_done)
                     initiator.ready.append(
-                        (join.gen, merged, join.qid, not first_own)
+                        (join.gen, merged, join.qid,
+                         True if edf else not first_own)
                     )
                     first_own = False
+                    own_gens.add(id(join.gen))
                 else:
                     push_event(
                         t_done, "resume",
                         (join.worker, join.gen, merged, join.qid),
                     )
+            if edf and own_gens:
+                initiator.free_gens = own_gens
 
         def run_worker_action(w: _Worker) -> None:
             """One scheduling action on worker w (paper Fig. 3b loop body)."""
@@ -581,9 +745,15 @@ class Engine:
 
             if not w.ready:
                 if query_queue and w.active < cfg.batch_size:
-                    qid = query_queue.popleft()
+                    qid = pick_query(w)
                     gen = make_coroutine(qid, queries[qid])
                     w.active += 1
+                    if plan is not None:
+                        # an idle worker picking up a not-yet-arrived... —
+                        # cannot happen (arrival events gate the queue) —
+                        # but a worker whose clock is BEHIND the arrival
+                        # idles until it: dispatch never precedes arrival
+                        w.t = max(w.t, float(plan.arrivals[qid]))
                     start_time[qid] = w.t
                     w.ready.append((gen, None, qid, True))
                 elif w.pending:
@@ -595,9 +765,10 @@ class Engine:
                 else:
                     return
 
-            gen, value, qid, charge_switch = w.ready.popleft()
+            gen, value, qid, charge_switch = pop_ready(w)
             if charge_switch:
                 w.t += self.cost.coroutine_switch_s
+                stats.coroutine_switches += 1
 
             while True:
                 try:
@@ -605,10 +776,30 @@ class Engine:
                 except StopIteration as fin:
                     drain_pool_resumes(w.t)  # publishes from this final step
                     results[qid] = fin.value
-                    latency = w.t - start_time[qid]
+                    service = w.t - start_time[qid]
+                    if plan is None:
+                        # no arrival schedule: latency == service time, the
+                        # pre-SLA numbers, bitwise
+                        latency = service
+                    else:
+                        # latency runs from ARRIVAL: queue wait (the tail's
+                        # dominant term under burst) now reaches p99
+                        latency = w.t - float(plan.arrivals[qid])
                     stats.sum_latency_s += latency
                     stats.latencies.append(latency)
                     stats.latency_qids.append(qid)
+                    stats.sum_service_s += service
+                    stats.service_times.append(service)
+                    stats.queue_wait_s += latency - service
+                    if deadlines is not None:
+                        dl = float(deadlines[qid])
+                        if w.t <= dl:
+                            stats.deadline_hits += 1
+                        else:
+                            stats.deadline_misses += 1
+                            stats.lateness_s += w.t - dl
+                    if plan is not None:
+                        plan.on_complete(qid, w.t, latency)
                     drop_query_tokens(qid)
                     w.active -= 1
                     w.done_queries += 1
@@ -629,13 +820,13 @@ class Engine:
                         nonlocal shared_rows
                         shared_pending.append((w, gen, qid, req))
                         shared_rows += req.rows
-                        if shared_rows >= cfg.fuse_rows:
+                        if shared_rows >= fuse_budget():
                             flush_shared(w)
                         return  # parked in the system-wide rendezvous
                     if cfg.fuse:
                         w.pending.append((gen, qid, req))
                         w.pending_rows += req.rows
-                        if w.pending_rows >= cfg.fuse_rows:
+                        if w.pending_rows >= fuse_budget():
                             flush_scores(w)
                         return  # parked in the rendezvous buffer
                     # fusion off: execute immediately (per-query dispatch)
@@ -672,13 +863,13 @@ class Engine:
                     if shared:
                         shared_pending.append((w, gen, qid, req))
                         shared_rows += req.rows
-                        if shared_rows >= cfg.fuse_rows:
+                        if shared_rows >= fuse_budget():
                             flush_shared(w)
                         return  # parked in the system-wide rendezvous
                     if cfg.fuse:
                         w.pending.append((gen, qid, req))
                         w.pending_rows += req.rows
-                        if w.pending_rows >= cfg.fuse_rows:
+                        if w.pending_rows >= fuse_budget():
                             flush_scores(w)
                         return  # parked in the rendezvous buffer
                     # fusion off: one fused beam launch for this query alone
@@ -712,7 +903,7 @@ class Engine:
                         for s, sub, ridx in parts:
                             router.pending[s].append((join, sub, ridx))
                             router.pending_rows[s] += sub.rows
-                            if router.pending_rows[s] >= cfg.fuse_rows:
+                            if router.pending_rows[s] >= fuse_budget():
                                 crossed.append(s)
                         if crossed:
                             flush_sharded(w, only=crossed)
@@ -835,6 +1026,41 @@ class Engine:
                     raise ValueError(f"unknown op {kind}")
 
         # ------------------------------------------------------- global loop
+        def pick_initiator(contributors) -> _Worker:
+            """The worker that drives a stall flush.  rr: the earliest-clock
+            contributor (it would otherwise sit idle) — the pre-SLA rule,
+            bitwise.  sla: the contributor whose PARKED work has the earliest
+            deadline (ties by clock, then wid) — the flush resumes that
+            worker's most-slack-critical coroutine first (switch-free), so
+            initiator choice is itself an EDF decision."""
+            if edf and deadlines is not None:
+                if sched is None:
+                    initiator = min(
+                        contributors,
+                        key=lambda x: (parked_deadline(x), x.t, x.wid),
+                    )
+                else:
+                    initiator = min(
+                        contributors,
+                        key=lambda x: (
+                            parked_deadline(x), x.t, sched.worker_rank(x.wid)
+                        ),
+                    )
+                    d0 = parked_deadline(initiator)
+                    if sum(1 for x in contributors
+                           if parked_deadline(x) == d0
+                           and x.t == initiator.t) > 1:
+                        sched.ties["slack"] += 1
+                return initiator
+            if sched is None:
+                return min(contributors, key=lambda x: (x.t, x.wid))
+            initiator = min(
+                contributors, key=lambda x: (x.t, sched.worker_rank(x.wid))
+            )
+            if sum(1 for x in contributors if x.t == initiator.t) > 1:
+                sched.ties["worker"] += 1
+            return initiator
+
         def runnable(w: _Worker) -> bool:
             # a worker whose only work sits in the SHARED rendezvous is
             # stalled — it cannot flush alone; w.pending is per-worker only
@@ -867,18 +1093,7 @@ class Engine:
                 # The earliest-clock contributing worker initiates (it would
                 # otherwise sit idle) — the fused batch spans all workers.
                 contributors = {id(wk): wk for wk, _, _, _ in shared_pending}
-                if sched is None:
-                    initiator = min(
-                        contributors.values(), key=lambda x: (x.t, x.wid)
-                    )
-                else:
-                    initiator = min(
-                        contributors.values(),
-                        key=lambda x: (x.t, sched.worker_rank(x.wid)),
-                    )
-                    if sum(1 for x in contributors.values()
-                           if x.t == initiator.t) > 1:
-                        sched.ties["worker"] += 1
+                initiator = pick_initiator(contributors.values())
                 if next_event_t is not None and next_event_t <= initiator.t:
                     def initiator_due() -> bool:
                         # ANY due completion of the initiator's own forces the
@@ -929,18 +1144,7 @@ class Engine:
                 for plist in router.pending:
                     for join, _, _ in plist:
                         contributors.setdefault(id(join.worker), join.worker)
-                if sched is None:
-                    initiator = min(
-                        contributors.values(), key=lambda x: (x.t, x.wid)
-                    )
-                else:
-                    initiator = min(
-                        contributors.values(),
-                        key=lambda x: (x.t, sched.worker_rank(x.wid)),
-                    )
-                    if sum(1 for x in contributors.values()
-                           if x.t == initiator.t) > 1:
-                        sched.ties["worker"] += 1
+                initiator = pick_initiator(contributors.values())
                 if next_event_t is not None and next_event_t <= initiator.t:
                     # completions already due run before the stall flush —
                     # the same apply-first rule as the shared branch (the
@@ -989,10 +1193,12 @@ def run_workload(
     fuse_rows: int = 256,
     shared_rendezvous: bool = False,
     overlap_flush: bool = False,
+    scheduler: str = "rr",
     hbm=None,
     schedule=None,
     verify=None,
     shards=None,
+    sla=None,
 ) -> tuple[list, WorkloadStats]:
     """Convenience wrapper: build an engine, run all queries, return results+stats."""
     engine = Engine(
@@ -1002,7 +1208,7 @@ def run_workload(
         config=EngineConfig(
             n_workers=n_workers, batch_size=batch_size, page_size=page_size,
             fuse=fuse, fuse_rows=fuse_rows, shared_rendezvous=shared_rendezvous,
-            overlap_flush=overlap_flush,
+            overlap_flush=overlap_flush, scheduler=scheduler,
         ),
         dist=dist,
         qb=qb,
@@ -1011,4 +1217,4 @@ def run_workload(
         verify=verify,
         shards=shards,
     )
-    return engine.run(make_coroutine, queries)
+    return engine.run(make_coroutine, queries, sla=sla)

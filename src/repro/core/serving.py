@@ -52,6 +52,7 @@ from repro.core.engine import Engine, EngineConfig
 from repro.core.hbm import HbmTier, HbmView
 from repro.core.pagecache import PageCache
 from repro.core.quant import QuantizedBase
+from repro.core.scheduling import SlaController, SlaPlan, sla_seconds
 from repro.core.search import PageAccessor, RecordAccessor, SearchParams
 from repro.core.sim import SSD, SSDConfig, WorkloadStats
 from repro.core.store import PageStore
@@ -444,6 +445,12 @@ class ServingPlane:
             fuse_rows=cfg0.fuse_rows,
             shared_rendezvous=bool(cfg0.shared_rendezvous),
             overlap_flush=bool(cfg0.overlap_flush),
+            scheduler=cfg0.scheduler,
+        )
+        # resolve the None->process-default fields run() reads off the
+        # plane's own config (build_system resolved them on each tenant)
+        self.config = dataclasses.replace(
+            self.config, scheduler=cfg0.scheduler, sla_ms=cfg0.sla_ms,
         )
         self.cost = built[0].cost
 
@@ -475,9 +482,41 @@ class ServingPlane:
             for t, j in zip(workload.tenant_ids, workload.query_ids)
         ]
 
+        # ---- SLA plan: arrivals + per-tenant deadlines + feedback ---------
+        # Built whenever the run has any SLA surface (the "sla" scheduler, a
+        # workload with arrival timestamps, or deadlines configured); plain
+        # rr batch runs pass plan=None and stay bitwise the pre-SLA plane.
+        cfgS = self.config
+        sla_plan = None
+        controller = None
+        if (
+            cfgS.scheduler == "sla"
+            or workload.arrival_s is not None
+            or cfgS.sla_ms is not None
+        ):
+            if cfgS.sla_ms is not None and cfgS.sla_feedback:
+                controller = SlaController(
+                    n_tenants=len(tenants),
+                    sla_s=sla_seconds(cfgS.sla_ms, len(tenants)),
+                    pool=self.pool,
+                )
+            sla_plan = SlaPlan.build(
+                len(queries),
+                arrivals=workload.arrival_s,
+                sla_ms=cfgS.sla_ms,
+                tenant_of=workload.tenant_ids,
+                n_tenants=len(tenants),
+                controller=controller,
+            )
+
         def make_coroutine(qid: int, q):
             t = tenants[int(workload.tenant_ids[qid])]
-            return t.algorithm(t.ctx, q, t.params)
+            params = t.params
+            if controller is not None:
+                # the feedback loop's beam steering: the tenant's CURRENT
+                # scale decides this query's candidate-list width
+                params = controller.params_for(t.tid, params)
+            return t.algorithm(t.ctx, q, params)
 
         # snapshot cumulative counters -> per-run deltas
         acc0 = [t.accessor.stats() for t in tenants]
@@ -507,7 +546,7 @@ class ServingPlane:
             schedule=schedule,
             verify=self.checker,
         )
-        results, stats = engine.run(make_coroutine, queries)
+        results, stats = engine.run(make_coroutine, queries, sla=sla_plan)
         if self.checker is not None:
             self.checker.raise_if_violations()
 
@@ -531,8 +570,13 @@ class ServingPlane:
                 setattr(stats, key,
                         getattr(stats, key) + val - pressure0[k][key])
 
-        # per-tenant slices
+        # per-tenant slices.  The split keys on qid (completion order is
+        # whatever the scheduler produced — under "sla" qids complete far out
+        # of submission order), so ``lat_by_qid`` must be a qid-indexed map,
+        # never a positional zip against ``positions()``;
+        # tests/test_serving.py pins this against priority reordering.
         lat_by_qid = dict(zip(stats.latency_qids, stats.latencies))
+        svc_by_qid = dict(zip(stats.latency_qids, stats.service_times))
         tenant_runs: list[TenantRun] = []
         for t, (h0, m0), r0, hb0 in zip(tenants, acc0, reads0, hbm0):
             pos = workload.positions(t.tid)
@@ -542,6 +586,21 @@ class ServingPlane:
             ts.latencies = [lat_by_qid[i] for i in pos if i in lat_by_qid]
             ts.latency_qids = [i for i in pos if i in lat_by_qid]
             ts.sum_latency_s = float(sum(ts.latencies))
+            ts.service_times = [svc_by_qid[i] for i in pos if i in svc_by_qid]
+            ts.sum_service_s = float(sum(ts.service_times))
+            ts.queue_wait_s = ts.sum_latency_s - ts.sum_service_s
+            if sla_plan is not None and sla_plan.deadlines is not None:
+                # a query met its SLA iff its arrival-relative latency fits
+                # inside its deadline window (deadline - arrival)
+                for i in ts.latency_qids:
+                    win = float(
+                        sla_plan.deadlines[i] - sla_plan.arrivals[i]
+                    )
+                    if lat_by_qid[i] <= win:
+                        ts.deadline_hits += 1
+                    else:
+                        ts.deadline_misses += 1
+                        ts.lateness_s += lat_by_qid[i] - win
             h1, m1 = t.accessor.stats()
             ts.cache_hits = h1 - h0
             ts.cache_misses = m1 - m0
@@ -587,9 +646,15 @@ def evaluate_plane(
         "tenant_quota": plane.config.tenant_quota,
         "distance_backend": plane.dist.name,
         "combined_table": plane.table is not None,
+        "scheduler": plane.config.scheduler,
+        "sla_ms": plane.config.sla_ms,
         "qps": s.qps,
         "mean_latency_ms": s.mean_latency_ms,
         "p99_latency_ms": s.p99_latency_ms(),
+        "mean_service_ms": s.mean_service_ms,
+        "queue_wait_s": s.queue_wait_s,
+        "deadline_hit_rate": s.deadline_hit_rate,
+        "deadline_misses": s.deadline_misses,
         "hit_rate": s.hit_rate,
         "ios_per_query": s.ios_per_query,
         "lock_waits": s.lock_waits,
@@ -613,6 +678,10 @@ def evaluate_plane(
             "qps": tr.stats.qps,
             "mean_latency_ms": tr.stats.mean_latency_ms,
             "p99_latency_ms": tr.stats.p99_latency_ms(),
+            "mean_service_ms": tr.stats.mean_service_ms,
+            "queue_wait_s": tr.stats.queue_wait_s,
+            "deadline_hit_rate": tr.stats.deadline_hit_rate,
+            "deadline_misses": tr.stats.deadline_misses,
             "hit_rate": tr.stats.hit_rate,
             "reads": tr.stats.io_count,
             "hbm_hits": tr.stats.hbm_hits,

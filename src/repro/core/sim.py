@@ -156,6 +156,23 @@ class WorkloadStats:
     # query id of each ``latencies`` entry (completion order) — lets a
     # multi-tenant caller split the latency distribution by tenant
     latency_qids: list[int] = dataclasses.field(default_factory=list)
+    # latency vs service time: with an SlaPlan attached, ``latencies`` are
+    # completion - ARRIVAL (queue wait + service) while ``service_times``
+    # keep the old completion - dispatch number; without a plan the two are
+    # identical and queue_wait_s stays 0 (bitwise back-compat)
+    sum_service_s: float = 0.0
+    service_times: list[float] = dataclasses.field(default_factory=list)
+    queue_wait_s: float = 0.0        # total seconds queries sat admitted-but-
+                                     # undispatched (latency - service)
+    # deadline accounting (SlaPlan with deadlines; zeros otherwise)
+    deadline_hits: int = 0           # completions at/before their deadline
+    deadline_misses: int = 0
+    lateness_s: float = 0.0          # total seconds past deadline, misses only
+    # charged coroutine switches (dispatches that paid coroutine_switch_s) —
+    # the observable the rr/sla switch-accounting parity tests pin: a
+    # preempted-then-resumed coroutine is charged exactly one switch under
+    # either scheduler, and a flush's switch-free credit is spent exactly once
+    coroutine_switches: int = 0
     io_count: int = 0
     io_bytes: int = 0
     coalesced_reads: int = 0   # reads served by an already in-flight page (no SQE)
@@ -217,6 +234,15 @@ class WorkloadStats:
         # returns the maximum (p100) for every run with <= 100 queries.
         rank = min(len(xs) - 1, max(0, math.ceil(0.99 * len(xs)) - 1))
         return 1e3 * xs[rank]
+
+    @property
+    def mean_service_ms(self) -> float:
+        return 1e3 * self.sum_service_s / self.n_queries if self.n_queries else 0.0
+
+    @property
+    def deadline_hit_rate(self) -> float:
+        tot = self.deadline_hits + self.deadline_misses
+        return self.deadline_hits / tot if tot else 0.0
 
     @property
     def ios_per_query(self) -> float:

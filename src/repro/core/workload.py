@@ -52,9 +52,20 @@ class MixedWorkload:
     # ``tenant_ids.max()+1`` silently drops cold tenants that drew zero
     # arrivals (heavy zipf s, short streams) and skews per-tenant accounting.
     n_tenants: int = 0
+    # Absolute arrival time of each query in simulated seconds (None == the
+    # open-loop batch regime: everything arrives at t=0, latency == queue
+    # wait + service).  Generators attach these when given a ``qps`` rate;
+    # the serving plane threads them into per-query deadlines (SlaPlan).
+    arrival_s: np.ndarray | None = None
 
     def __post_init__(self):
         assert self.tenant_ids.shape == self.query_ids.shape
+        if self.arrival_s is not None:
+            object.__setattr__(
+                self, "arrival_s",
+                np.asarray(self.arrival_s, dtype=np.float64),
+            )
+            assert self.arrival_s.shape == self.tenant_ids.shape
         if self.n_tenants == 0 and len(self):
             # Back-compat for hand-built workloads: fall back to the observed
             # maximum (the old, lossy derivation) only when no count is given.
@@ -84,6 +95,34 @@ class MixedWorkload:
         return list(np.diff(edges))
 
 
+def _poisson_arrivals(rng, n_ops: int, qps: float) -> np.ndarray:
+    """Open-arrival Poisson process at rate ``qps``: exponential
+    inter-arrival gaps, cumulative absolute times."""
+    assert qps > 0
+    return np.cumsum(rng.exponential(1.0 / qps, size=n_ops))
+
+
+def _burst_arrivals(rng, tenants: np.ndarray, qps: float) -> np.ndarray:
+    """Burst-clustered arrivals matching the tenant runs: every query of a
+    same-tenant run arrives AT the run's start instant (the worst case for
+    queue wait — and a source of genuinely equal deadlines the schedule
+    explorer can permute); run starts are spaced exponentially so the
+    long-run rate is still ``qps``."""
+    assert qps > 0
+    n = len(tenants)
+    out = np.empty(n, dtype=np.float64)
+    if n == 0:
+        return out
+    change = np.flatnonzero(np.diff(tenants) != 0)
+    starts = np.concatenate([[0], change + 1])
+    lengths = np.diff(np.concatenate([starts, [n]]))
+    t = 0.0
+    for s0, ln in zip(starts, lengths):
+        t += rng.exponential(ln / qps)
+        out[s0 : s0 + ln] = t
+    return out
+
+
 def _sequential_query_ids(
     tenant_ids: np.ndarray, queries_per_tenant
 ) -> np.ndarray:
@@ -99,9 +138,11 @@ def _sequential_query_ids(
 
 
 def uniform_mix(
-    queries_per_tenant, n_ops: int, seed: int = 0
+    queries_per_tenant, n_ops: int, seed: int = 0, qps: float | None = None
 ) -> MixedWorkload:
-    """Arrivals drawn uniformly across tenants."""
+    """Arrivals drawn uniformly across tenants.  ``qps`` attaches Poisson
+    arrival times at that rate (drawn AFTER the tenant stream, so the
+    tenant/query sequence is bit-identical with or without it)."""
     queries_per_tenant = np.asarray(queries_per_tenant, dtype=np.int64)
     rng = np.random.default_rng(seed)
     tenants = rng.integers(0, queries_per_tenant.shape[0], size=n_ops)
@@ -111,11 +152,13 @@ def uniform_mix(
         tenant_ids=tenants,
         query_ids=_sequential_query_ids(tenants, queries_per_tenant),
         n_tenants=int(queries_per_tenant.shape[0]),
+        arrival_s=None if qps is None else _poisson_arrivals(rng, n_ops, qps),
     )
 
 
 def zipfian_mix(
-    queries_per_tenant, n_ops: int, s: float = 1.2, seed: int = 0
+    queries_per_tenant, n_ops: int, s: float = 1.2, seed: int = 0,
+    qps: float | None = None,
 ) -> MixedWorkload:
     """Tenant popularity ~ rank^-s: tenant 0 is the hot tenant.
 
@@ -132,16 +175,18 @@ def zipfian_mix(
         tenant_ids=tenants,
         query_ids=_sequential_query_ids(tenants, queries_per_tenant),
         n_tenants=n_tenants,
+        arrival_s=None if qps is None else _poisson_arrivals(rng, n_ops, qps),
     )
 
 
 def bursty_mix(
     queries_per_tenant, n_ops: int, mean_burst: float = 8.0,
-    s: float = 0.0, seed: int = 0,
+    s: float = 0.0, seed: int = 0, qps: float | None = None,
 ) -> MixedWorkload:
     """Bursty arrivals: pick a tenant (uniform, or Zipf-s when ``s > 0``),
     emit a geometric-length run of its queries, repeat.  Mean run length is
-    ``mean_burst``."""
+    ``mean_burst``.  ``qps`` attaches burst-clustered arrival times: a whole
+    run lands at one instant, runs spaced so the long-run rate is ``qps``."""
     queries_per_tenant = np.asarray(queries_per_tenant, dtype=np.int64)
     n_tenants = queries_per_tenant.shape[0]
     assert mean_burst >= 1.0
@@ -162,6 +207,7 @@ def bursty_mix(
         tenant_ids=tenants,
         query_ids=_sequential_query_ids(tenants, queries_per_tenant),
         n_tenants=n_tenants,
+        arrival_s=None if qps is None else _burst_arrivals(rng, tenants, qps),
     )
 
 

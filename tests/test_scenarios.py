@@ -227,3 +227,49 @@ def test_scenario_matrix_sharded_verify_inert(algo, fuse, tiny):
     assert sys_v.checker is not None, f"{label}: checker never armed"
     sys_v.checker.raise_if_violations()
     assert sys_v.checker.flushes > 0, f"{label}: no flush boundary observed"
+
+
+@pytest.mark.parametrize("fuse", [False, True], ids=["nofuse", "fuse"])
+@pytest.mark.parametrize("scheduler", ["rr", "sla"])
+def test_scenario_matrix_scheduler_verify_inert(scheduler, fuse, tiny):
+    """The scheduler row of the matrix: {rr, sla} x {fuse} x
+    {verify_protocol}.  With staggered arrivals and deadlines attached the
+    protocol checker must stay bitwise inert under EITHER scheduling policy
+    (EDF reorders dispatches, which is exactly the traffic the checker's
+    transition rules must not perturb), and deadline accounting must agree
+    between the verified and unverified runs."""
+    from repro.core.scheduling import SlaPlan
+
+    ds, graph, qb = tiny
+    n = len(ds.queries)
+    arr = np.linspace(0.0, 5e-4, n)  # arrivals staggered inside the run
+
+    def run(verify):
+        cfg = baselines.SystemConfig(
+            buffer_ratio=0.2, n_workers=2, batch_size=4,
+            fuse=fuse, async_load=True,
+            scheduler=scheduler, sla_ms=2.0,
+            verify_protocol=verify,
+            params=SearchParams(L=24, W=4),
+        )
+        sys_ = baselines.build_system("velo", ds.base, graph, qb, cfg)
+        results, stats = sys_.run(
+            ds.queries, sla=SlaPlan.build(n, arrivals=arr, sla_ms=2.0)
+        )
+        return sys_, results, stats
+
+    _, ref, ref_stats = run(False)
+    sys_v, got, stats = run(True)
+    label = f"velo/{scheduler}/fuse={fuse}/verify"
+    assert [
+        (list(r.ids), list(r.dists), r.hops) for r in got
+    ] == [
+        (list(r.ids), list(r.dists), r.hops) for r in ref
+    ], f"{label}: verified run diverged from unverified run"
+    assert stats.deadline_hits == ref_stats.deadline_hits, label
+    assert stats.deadline_misses == ref_stats.deadline_misses, label
+    assert stats.coroutine_switches == ref_stats.coroutine_switches, label
+    assert stats.latency_qids == ref_stats.latency_qids, label
+    assert sys_v.checker is not None, f"{label}: checker never armed"
+    sys_v.checker.raise_if_violations()
+    assert sys_v.checker.flushes > 0, f"{label}: no flush boundary observed"

@@ -1,0 +1,339 @@
+"""SLA-aware scheduling (core.scheduling + the engine's EDF mode).
+
+Four claim families:
+
+  * latency accounting — with an ``SlaPlan`` attached, ``latencies`` run
+    from ARRIVAL (queue wait behind a full batch reaches the tail), the old
+    dispatch-relative number survives as ``service_times``, and a plan-free
+    run stays bitwise the pre-SLA engine (latency == service, wait == 0);
+  * rr parity — ``scheduler="rr"`` with a plan attached changes only the
+    latency semantics: results, makespan and the charged coroutine-switch
+    count are bitwise the plan-free run, for all five algorithms;
+  * switch charging under reordering — EDF resumes out of submission order,
+    but a preempted-then-resumed coroutine is still charged exactly one
+    switch: with equal deadlines sla matches rr bitwise, and with reversed
+    deadlines (inmemory: no I/O, so the dispatch multiset is order-free)
+    the total charge count is identical while completion order inverts;
+  * the feedback controller — steering outputs are pure functions of the
+    completion windows (equal-time updates commute), beam width never drops
+    below k, the fuse budget floors, and quota boosts respect the pool's
+    ``tenant_owned <= tenant_cap`` invariant.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core import dataset as dataset_mod
+from repro.core import vamana as vamana_mod
+from repro.core.quant import RabitQuantizer
+from repro.core.scheduling import SlaController, SlaPlan, sla_seconds
+from repro.core.search import ALGORITHMS, SearchParams
+
+ALGOS = sorted(ALGORITHMS)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    ds = dataset_mod.make_dataset(n=600, d=32, n_queries=16, k=10, seed=5)
+    graph = vamana_mod.build_vamana(ds.base, R=12, L=24, batch_size=256,
+                                    seed=5)
+    qb = RabitQuantizer(32, seed=5).fit_encode(ds.base)
+    return ds, graph, qb
+
+
+def _system(tiny, algo="diskann", **kw):
+    ds, graph, qb = tiny
+    kw.setdefault("buffer_ratio", 0.2)
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("params", SearchParams(L=24, W=4))
+    cfg = baselines.SystemConfig(**kw)
+    return baselines.build_system(algo, ds.base, graph, qb, cfg)
+
+
+def _proj(results):
+    return [(list(r.ids), list(r.dists), r.hops) for r in results]
+
+
+# ------------------------------------------------- latency accounting bugfix
+
+
+def test_latency_includes_queue_wait(tiny):
+    """The PR's headline bugfix: behind a full batch, a query's p99 must
+    include the time it sat admitted-but-undispatched.  An all-arrive-at-t0
+    plan changes ONLY the latency semantics — answers, makespan and switch
+    charges stay bitwise the plan-free run, and the old dispatch-relative
+    numbers survive as ``service_times``."""
+    ds = tiny[0]
+    ref_res, ref = _system(tiny).run(ds.queries)
+    res, stats = _system(tiny).run(
+        ds.queries, sla=SlaPlan.build(len(ds.queries))
+    )
+    assert _proj(res) == _proj(ref_res)
+    assert stats.makespan_s == ref.makespan_s
+    assert stats.coroutine_switches == ref.coroutine_switches
+    # the old latency distribution IS the service-time distribution
+    assert stats.service_times == ref.latencies
+    assert stats.sum_service_s == ref.sum_latency_s
+    # 16 queries, 2 workers x batch 4: most of them queued behind the batch
+    assert stats.queue_wait_s > 0.0
+    assert max(stats.latencies) > max(stats.service_times)
+    for lat, svc in zip(stats.latencies, stats.service_times):
+        assert lat >= svc - 1e-12
+
+
+@pytest.mark.parametrize("workers,batch", [(1, 1), (2, 4)],
+                         ids=["serial", "batched"])
+def test_no_plan_latency_equals_service(tiny, workers, batch):
+    """Plan-free runs are bitwise the pre-SLA engine: latency == service
+    per query, zero queue wait, no deadline accounting — including the
+    degenerate B=1 / n_workers=1 topology."""
+    ds = tiny[0]
+    _, stats = _system(tiny, n_workers=workers, batch_size=batch).run(
+        ds.queries
+    )
+    assert stats.latencies == stats.service_times
+    assert stats.queue_wait_s == 0.0
+    assert stats.deadline_hits == 0 and stats.deadline_misses == 0
+
+
+def test_arrival_gates_dispatch(tiny):
+    """Arrivals gate admission: with inter-arrival gaps far above the
+    service time the plane drains between arrivals, so queue wait is exactly
+    zero and the makespan stretches past the last arrival."""
+    ds = tiny[0]
+    n = len(ds.queries)
+    arr = np.arange(n) * 0.05  # 50 ms apart >> per-query service time
+    _, stats = _system(tiny).run(ds.queries, sla=SlaPlan.build(n, arrivals=arr))
+    assert stats.queue_wait_s == 0.0
+    assert stats.latencies == stats.service_times
+    assert stats.makespan_s > float(arr[-1])
+
+
+# -------------------------------------------- rr parity and switch charging
+
+
+@pytest.mark.parametrize("fuse", [False, True], ids=["nofuse", "fuse"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_rr_parity_with_plan(tiny, algo, fuse):
+    """scheduler="rr" + a deadline plan is bitwise the plan-free engine for
+    every algorithm: same answers, same makespan, same charged switch count
+    (the per-entry switch flags are untouched in rr)."""
+    ds = tiny[0]
+    ref_res, ref = _system(tiny, algo=algo, fuse=fuse).run(ds.queries)
+    res, stats = _system(tiny, algo=algo, fuse=fuse, scheduler="rr").run(
+        ds.queries, sla=SlaPlan.build(len(ds.queries), sla_ms=5.0)
+    )
+    assert _proj(res) == _proj(ref_res)
+    assert stats.makespan_s == ref.makespan_s
+    assert stats.coroutine_switches == ref.coroutine_switches
+    assert stats.service_times == ref.latencies
+    assert stats.deadline_hits + stats.deadline_misses == len(ds.queries)
+
+
+@pytest.mark.parametrize("fuse", [False, True], ids=["nofuse", "fuse"])
+def test_sla_equal_deadlines_matches_rr_bitwise(tiny, fuse):
+    """With every deadline equal, EDF ordering degenerates to submission
+    order — and the flush's switch-free credit must land exactly where rr's
+    first-pop rule puts it, so the two schedulers are bitwise identical."""
+    ds = tiny[0]
+    n = len(ds.queries)
+    rr_res, rr = _system(tiny, fuse=fuse, scheduler="rr").run(
+        ds.queries, sla=SlaPlan.build(n, sla_ms=5.0)
+    )
+    sla_res, sla = _system(tiny, fuse=fuse, scheduler="sla").run(
+        ds.queries, sla=SlaPlan.build(n, sla_ms=5.0)
+    )
+    assert _proj(sla_res) == _proj(rr_res)
+    assert sla.makespan_s == rr.makespan_s
+    assert sla.coroutine_switches == rr.coroutine_switches
+    assert sla.latency_qids == rr.latency_qids
+
+
+def test_sla_edf_reorders_with_exactly_one_switch_per_resume(tiny):
+    """Reversed deadlines on one worker: EDF admits and completes back to
+    front while rr runs front to back.  inmemory never suspends on I/O, so
+    every dispatch is an admission or a rendezvous resume — and the
+    exactly-one-switch law is directly checkable: charged switches ==
+    admissions + resumes - one free credit per flush, under EITHER pop
+    order.  (A resume that skipped its charge, or a preempted coroutine
+    charged twice, breaks the identity.)"""
+    ds = tiny[0]
+    n = len(ds.queries)
+
+    def plan():
+        return SlaPlan(
+            arrivals=np.zeros(n), deadlines=np.arange(n, 0, -1) * 1e-3
+        )
+
+    kw = dict(algo="inmemory", n_workers=1, batch_size=4, fuse=True,
+              fuse_rows=64)
+    rr_res, rr = _system(tiny, scheduler="rr", **kw).run(ds.queries,
+                                                         sla=plan())
+    sla_res, sla = _system(tiny, scheduler="sla", **kw).run(ds.queries,
+                                                            sla=plan())
+    assert _proj(sla_res) == _proj(rr_res)
+    # the rendezvous genuinely preempted and resumed coroutines
+    assert sla.score_flushes > 0
+    for stats in (rr, sla):
+        assert stats.coroutine_switches == (
+            n + stats.score_requests - stats.score_flushes
+        )
+    # completion order inverted: the tightest deadline (last qid) finishes
+    # first, and the whole order differs from rr's FIFO
+    assert sla.latency_qids != rr.latency_qids
+    assert sla.latency_qids[0] >= n - kw["batch_size"]
+    assert (
+        float(np.mean(sla.latency_qids[: n // 2]))
+        > float(np.mean(sla.latency_qids[n // 2:]))
+    )
+
+
+# ----------------------------------------------------- starvation regression
+
+
+def test_sla_holds_cold_tenant_floor_rr_violates(tiny):
+    """Starvation under skew: a zipfian 4-tenant mix where the cold tenant
+    carries a premium (tight) SLA.  Under rr its sparse queries queue behind
+    the hot tenant's backlog and the 1.5 ms deadline is hopeless; EDF jumps
+    them over the backlog and holds the floor — without starving the hot
+    tenant in return (its hit-rate must not degrade vs rr)."""
+    from repro.core import workload as workload_mod
+    from repro.core.serving import ServingPlane, TenantSpec
+
+    ds, graph, qb = tiny
+    specs = [
+        TenantSpec.from_dataset(f"t{i}", ds, graph, qb,
+                                params=SearchParams(L=24, W=4))
+        for i in range(4)
+    ]
+    wl = workload_mod.zipfian_mix([16] * 4, 200, s=1.6, seed=2, qps=30000.0)
+    assert wl.counts()[3] == min(wl.counts())  # tenant 3 IS the cold one
+
+    rates = {}
+    for sched in ("rr", "sla"):
+        cfg = baselines.SystemConfig(
+            buffer_ratio=0.2, n_workers=2, batch_size=4,
+            fuse=True, fuse_rows=64,
+            scheduler=sched, sla_ms=[6.0, 6.0, 6.0, 1.5],
+        )
+        run = ServingPlane(specs, cfg).run(wl)
+        rates[sched] = {
+            "cold": run.tenants[3].stats.deadline_hit_rate,
+            "hot": run.tenants[0].stats.deadline_hit_rate,
+            "global": run.stats.deadline_hit_rate,
+        }
+    assert rates["sla"]["cold"] >= 0.8, rates
+    assert rates["rr"]["cold"] < 0.3, rates
+    assert rates["sla"]["hot"] >= rates["rr"]["hot"] - 0.05, rates
+    assert rates["sla"]["global"] >= rates["rr"]["global"], rates
+
+
+# --------------------------------------------------------- plan construction
+
+
+def test_sla_plan_build_per_tenant_deadlines():
+    tof = np.array([0, 1, 0, 2, 1], dtype=np.int64)
+    arr = np.array([0.0, 1.0, 2.0, 3.0, 4.0])
+    plan = SlaPlan.build(5, arrivals=arr, sla_ms=[2.0, 4.0, 8.0],
+                         tenant_of=tof, n_tenants=3)
+    np.testing.assert_allclose(
+        plan.deadlines - plan.arrivals,
+        np.array([2e-3, 4e-3, 2e-3, 8e-3, 4e-3]),
+    )
+    assert plan.deadline(3) == pytest.approx(3.0 + 8e-3)
+
+
+def test_sla_plan_build_keeps_cold_tenants():
+    """n_tenants carries the TRUE count: a cold tenant that drew no queries
+    must not shift the per-tenant sla_ms mapping."""
+    tof = np.zeros(4, dtype=np.int64)  # tenant 1 drew nothing
+    plan = SlaPlan.build(4, sla_ms=[1.0, 99.0], tenant_of=tof, n_tenants=2)
+    np.testing.assert_allclose(plan.deadlines, np.full(4, 1e-3))
+
+
+def test_sla_plan_no_deadlines():
+    plan = SlaPlan.build(3)
+    assert plan.deadlines is None
+    assert plan.deadline(0) == float("inf")
+    plan.on_complete(0, 1.0, 0.5)  # no controller: a no-op
+
+
+def test_sla_seconds_scalar_and_sequence():
+    np.testing.assert_allclose(sla_seconds(2.0, 3), np.full(3, 2e-3))
+    np.testing.assert_allclose(sla_seconds([1.0, 10.0], 2),
+                               np.array([1e-3, 1e-2]))
+    with pytest.raises(AssertionError):
+        sla_seconds([1.0, 2.0, 3.0], 2)
+
+
+# ------------------------------------------------------- feedback controller
+
+
+def test_controller_order_insensitive():
+    """Equal-time completions commute: folding the same multiset in two
+    opposite orders lands in identical steering state — the property that
+    keeps pure-EDF sla runs schedule-invariant under the explorer."""
+    events = [
+        (0, 1.0, 0.004), (1, 1.0, 0.001), (0, 1.0, 0.003), (1, 1.0, 0.0005),
+        (0, 1.0, 0.005), (1, 1.0, 0.0008), (0, 1.0, 0.0045), (1, 1.0, 0.0002),
+    ]
+    sla = np.array([0.002, 0.002])
+    fwd = SlaController(2, sla)
+    rev = SlaController(2, sla)
+    for t, td, lat in events:
+        fwd.on_complete(t, td, lat)
+    for t, td, lat in reversed(events):
+        rev.on_complete(t, td, lat)
+    assert fwd.beam_scale(0) == rev.beam_scale(0)
+    assert fwd.beam_scale(1) == rev.beam_scale(1)
+    assert fwd.fuse_rows(256) == rev.fuse_rows(256)
+
+
+def test_controller_beam_and_fuse_bounds():
+    c = SlaController(1, np.array([0.001]), min_samples=1)
+    # the tail at 10x the SLA: beam clamps at min_scale, fuse budget floors
+    c.on_complete(0, 0.0, 0.010)
+    assert c.beam_scale(0) == pytest.approx(c.min_scale)
+    assert c.fuse_rows(256) == max(c.min_fuse_rows, 25)
+    assert c.fuse_rows(16) == 16  # the floor never raises a smaller base
+    p = SearchParams(k=10, L=12)
+    assert c.params_for(0, p).L >= p.k  # steering never cuts below k
+    # recovery: later fast completions prune the old window (horizon) and
+    # the beam widens back up to the cap
+    for _ in range(4):
+        c.on_complete(0, 1.0, 0.0001)
+    assert c.beam_scale(0) == pytest.approx(c.max_scale)
+    assert c.fuse_rows(256) == 256
+
+
+def test_controller_identity_when_on_target():
+    """A tenant whose tail sits at its SLA steers nothing: params_for
+    returns the SAME object (no allocation on the steady-state hot path)."""
+    c = SlaController(1, np.array([0.002]), min_samples=1)
+    c.on_complete(0, 0.0, 0.002)
+    assert c.beam_scale(0) == 1.0
+    p = SearchParams(L=24)
+    assert c.params_for(0, p) is p
+    assert c.fuse_rows(128) == 128
+
+
+def test_controller_quota_invariant():
+    class _Pool:
+        n_slots = 100
+        tenant_cap = np.array([40, 40], dtype=np.int64)
+        tenant_owned = np.array([35, 10], dtype=np.int64)
+
+    pool = _Pool()
+    c = SlaController(2, np.array([0.001, 0.001]), pool=pool, min_samples=1)
+    # tenant 0 misses at 3x: cap boosted (clamped at quota_boost), tenant 1
+    # untouched at base
+    c.on_complete(0, 0.0, 0.003)
+    assert pool.tenant_cap[0] == 80
+    assert pool.tenant_cap[1] == 40
+    # relaxing back can never strand ownership above the cap
+    pool.tenant_owned[0] = 95
+    c.on_complete(0, 1.0, 0.0001)  # recovered: boost would drop to base...
+    assert pool.tenant_cap[0] == 95  # ...but the cap floors at ownership
+    assert pool.tenant_cap[0] >= pool.tenant_owned[0]

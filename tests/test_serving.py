@@ -369,3 +369,52 @@ def test_evaluate_plane_reports_per_tenant_metrics(tenant_data):
         assert t["n_queries"] > 0
     # mixed algorithms: diskann forces the shared engine to B=1
     assert plane.batch_size == 1
+
+
+def test_per_tenant_latency_split_survives_priority_reordering(tenant_data):
+    """Under scheduler="sla" queries complete far out of submission order,
+    so the per-tenant latency/p99/deadline split must bin by QUERY ID
+    (``latency_qids``), never by completion position — a positional zip
+    against ``positions()`` silently assigns tenant 0's latencies to
+    whichever queries happened to finish first.  Regression for the
+    evaluate_plane p99 split."""
+    params = SearchParams(L=32, W=4)
+    specs = [_spec(tenant_data, 0, "velo", params=params),
+             _spec(tenant_data, 1, "velo", params=params)]
+    cfg = baselines.SystemConfig(
+        buffer_ratio=0.2, n_workers=2, batch_size=4, fuse=True, fuse_rows=64,
+        scheduler="sla", sla_ms=[5.0, 1.0], sla_feedback=False,
+    )
+    plane = ServingPlane(specs, cfg, shared_pool=True)
+    wl = workload_mod.bursty_mix([30, 30], 80, mean_burst=8, seed=1,
+                                 qps=20000.0)
+    run = plane.run(wl)
+    stats = run.stats
+    # EDF + bursts genuinely reordered completions
+    assert stats.latency_qids != sorted(stats.latency_qids)
+    assert len(stats.latencies) == len(wl)
+
+    lat_by_qid = dict(zip(stats.latency_qids, stats.latencies))
+    svc_by_qid = dict(zip(stats.latency_qids, stats.service_times))
+    for tr, tid in zip(run.tenants, (0, 1)):
+        pos = list(wl.positions(tid))
+        assert list(tr.stats.latency_qids) == pos
+        assert tr.stats.latencies == [lat_by_qid[i] for i in pos]
+        assert tr.stats.service_times == [svc_by_qid[i] for i in pos]
+        # the tenant's p99 comes from its OWN distribution
+        lo = 1e3 * min(tr.stats.latencies)
+        hi = 1e3 * max(tr.stats.latencies)
+        assert lo <= tr.stats.p99_latency_ms() <= hi
+        assert (
+            tr.stats.deadline_hits + tr.stats.deadline_misses
+            == tr.stats.n_queries
+        )
+    # per-tenant accounting sums back to the global stats
+    assert sum(t.stats.deadline_hits for t in run.tenants) == stats.deadline_hits
+    assert (
+        sum(t.stats.deadline_misses for t in run.tenants)
+        == stats.deadline_misses
+    )
+    assert sum(t.stats.queue_wait_s for t in run.tenants) == pytest.approx(
+        stats.queue_wait_s
+    )
